@@ -1,0 +1,102 @@
+"""§Perf hillclimb driver: per chosen cell, lower+compile the baseline and
+each candidate change, extract roofline terms, and record
+hypothesis -> change -> before -> after. Writes results/hillclimb.json.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+from repro.launch.cells import build_cell  # noqa: E402
+from repro.launch.dryrun import collective_bytes, HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def measure(arch, shape, mesh, overrides=None):
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, overrides=overrides)
+    with mesh:
+        comp = cell.fn.lower(*cell.args).compile()
+    cost = comp.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = collective_bytes(comp.as_text())
+    mem = comp.memory_analysis()
+    return {
+        "overrides": overrides or {},
+        "compile_s": round(time.time() - t0, 1),
+        "compute_ms": float(cost.get("flops", 0)) / PEAK_FLOPS_BF16 * 1e3,
+        "memory_ms": float(cost.get("bytes accessed", 0)) / HBM_BW * 1e3,
+        "collective_ms": sum(coll.values()) / ICI_BW * 1e3,
+        "collectives": coll,
+        "temp_gib": mem.temp_size_in_bytes / 2**30,
+        "args_gib": mem.argument_size_in_bytes / 2**30,
+    }
+
+
+EXPERIMENTS = [
+    # (arch, shape, variant-name, overrides, hypothesis)
+    ("mace", "ogb_products", "baseline", None,
+     "collective-bound: 6 replicated-output scatter all-reduces/step "
+     "(3 l3-channels x 2 layers) over (2.45M,128,2l+1) f32 node tensors"),
+    ("mace", "ogb_products", "fused_scatter", {"fused_scatter": True},
+     "1 concatenated scatter per layer -> 1/3 the all-reduce launches and "
+     "replicated buffers; bytes unchanged"),
+    ("mace", "ogb_products", "fused+bf16_msgs",
+     {"fused_scatter": True, "msg_dtype": "bf16"},
+     "bf16 messages halve scatter + all-reduce bytes -> collective term /2"),
+    ("dlrm-mlperf", "retrieval_cand", "baseline", None,
+     "collective-bound: global lax.top_k over the model-sharded (B,1M) "
+     "score row all-gathers the full score matrix"),
+    ("dlrm-mlperf", "retrieval_cand", "sharded_topk", {"sharded_topk": True},
+     "shard_map local top-k (100 per shard) then tiny merge -> collective "
+     "payload drops from 1M scores to 16x100"),
+    ("dlrm-mlperf", "retrieval_cand", "local_candidates",
+     {"sharded_topk": "local"},
+     "REVISED after sharded_topk refuted the top-k hypothesis: the real "
+     "cost is the (1M,128) row gather lowered to a 488MiB all-reduce; "
+     "shard-local candidate pools (production sharded-ANN layout) make the "
+     "gather local — only (256 x k) merge payloads cross the wire"),
+    ("mixtral-8x22b", "train_4k", "baseline", None,
+     "memory wall: 55 GiB/dev temp — per-layer f32 expert-grad partials + "
+     "full-batch activations"),
+    ("mixtral-8x22b", "train_4k", "microbatch4", {"microbatches": 4},
+     "4 gradient-accumulation microbatches cut activation/dispatch temps "
+     "~4x at the cost of 4x weight re-gathers (acceptable: weights "
+     "already stream per layer)"),
+    ("mixtral-8x22b", "train_4k", "microbatch8", {"microbatches": 8},
+     "8 microbatches push further if microbatch4 confirms"),
+]
+
+
+def main():
+    import jax.numpy as jnp
+    mesh = make_production_mesh()
+    out = []
+    for arch, shape, name, overrides, hypothesis in EXPERIMENTS:
+        ov = dict(overrides) if overrides else None
+        if ov and ov.get("msg_dtype") == "bf16":
+            ov["msg_dtype"] = jnp.bfloat16
+        try:
+            res = measure(arch, shape, mesh, ov)
+            res.update(arch=arch, shape=shape, variant=name,
+                       hypothesis=hypothesis, ok=True)
+        except Exception as e:
+            res = {"arch": arch, "shape": shape, "variant": name,
+                   "ok": False, "error": repr(e)[:300]}
+        out.append(res)
+        print(json.dumps(res, default=str), flush=True)
+        with open("results/hillclimb.json", "w") as f:
+            json.dump(out, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    main()

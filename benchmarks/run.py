@@ -1,0 +1,208 @@
+"""Benchmark harness — one function per paper table/figure plus kernel
+micro-benches and the roofline reader. Prints ``name,us_per_call,derived``
+CSV rows (derived = the table's headline number).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig4,table1
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROWS = []
+
+
+def row(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, n=3):
+    fn()  # compile/warmup
+    t0 = time.time()
+    for _ in range(n):
+        out = fn()
+        jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4: degree distribution + Yule-Simon EM fit (paper: gamma = 2.94)
+# ---------------------------------------------------------------------------
+
+def bench_fig4():
+    from repro.core import QRelTable, fit_em
+    from repro.core.graph_builder import build_affinity_graph, node_degrees
+    from repro.data.synthetic import generate_qrels
+
+    q, e, s, _, _, ne = generate_qrels(num_queries=20000, qrels_per_query=3,
+                                       alpha=0.5, num_topics=64, seed=1)
+    qr = QRelTable(jnp.asarray(q), jnp.asarray(e), jnp.asarray(s),
+                   jnp.ones(len(q), bool))
+    build = jax.jit(lambda t: build_affinity_graph(
+        t, num_queries=20000, tau_quantile=0.5, fanout=8))
+    us = _timeit(lambda: build(qr))
+    edges = build(qr)
+    deg = np.asarray(node_degrees(edges, ne))
+    fit = fit_em(jnp.asarray(deg[deg > 0]), max_iters=500)
+    row("fig4_graph_build", us, f"gamma={float(fit.gamma):.3f}")
+    row("fig4_em_fit",
+        _timeit(lambda: fit_em(jnp.asarray(deg[deg > 0]), max_iters=500)),
+        f"stderr={float(fit.stderr):.2e}")
+
+
+# ---------------------------------------------------------------------------
+# Tables I & II: p@3 + query density, full vs uniform vs WindTunnel
+# ---------------------------------------------------------------------------
+
+def bench_table1_table2():
+    from repro.core import QRelTable, WindTunnelConfig, run_windtunnel
+    from repro.data.synthetic import generate_corpus
+    from repro.retrieval.experiment import evaluate_sample
+    from repro.retrieval.tfidf import tfidf_vectors
+
+    corpus = generate_corpus(num_queries=1280, qrels_per_query=32,
+                             num_topics=96, aux_fraction=2.0, seed=0,
+                             query_len=24, vocab_size=3072)
+    ev, df = tfidf_vectors(corpus.passage_tokens, corpus.vocab_size)
+    qv, _ = tfidf_vectors(corpus.query_tokens, corpus.vocab_size)
+
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    cfg = WindTunnelConfig(tau_quantile=0.5, fanout=16, lp_rounds=5,
+                           target_size=0.15 * corpus.num_primary, seed=0)
+    wt_fn = jax.jit(lambda q: run_windtunnel(
+        q, num_queries=corpus.num_queries,
+        num_entities=corpus.num_entities, config=cfg))
+    us_wt = _timeit(lambda: wt_fn(qrels).sample.entity_mask, n=1)
+    res = wt_fn(qrels)
+    wt_mask = np.asarray(res.sample.entity_mask)
+    rate = wt_mask.sum() / corpus.num_primary
+    rng = np.random.default_rng(7)
+    uni = np.zeros(corpus.num_entities, bool)
+    uni[:corpus.num_primary] = rng.random(corpus.num_primary) < rate
+
+    out = {}
+    for name, mask in [("full", None), ("uniform", uni),
+                       ("windtunnel", wt_mask)]:
+        out[name] = evaluate_sample(name, corpus, ev, qv, mask, seed=0,
+                                    engine="exact", query_chunk=128,
+                                    max_queries=768)
+    row("table1_p_at_3(windtunnel_pipeline)", us_wt,
+        "p@3 full=%.3f uniform=%.3f windtunnel=%.3f" %
+        (out["full"].p_at_3, out["uniform"].p_at_3,
+         out["windtunnel"].p_at_3))
+    row("table2_query_density", 0.0,
+        "rho_q uniform=%.3f windtunnel=%.3f ratio=%.2f" %
+        (out["uniform"].rho_q, out["windtunnel"].rho_q,
+         out["windtunnel"].rho_q / max(out["uniform"].rho_q, 1e-9)))
+    # the trained-encoder run (slow path) is persisted by examples/
+    if os.path.exists("results/table1.json"):
+        with open("results/table1.json") as f:
+            enc = json.load(f)
+        row("table1_trained_encoder", 0.0,
+            "p@3 full=%.3f uniform=%.3f windtunnel=%.3f" %
+            (enc["full"]["p_at_3"], enc["uniform"]["p_at_3"],
+             enc["windtunnel"]["p_at_3"]))
+
+
+# ---------------------------------------------------------------------------
+# Kernel micro-benches (CPU interpret mode: correctness-path timing only;
+# the TPU roofline story lives in EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+def bench_kernels():
+    from repro.kernels.topk_scoring.ops import topk_scores
+    from repro.kernels.topk_scoring.ref import topk_scores_ref
+    from repro.kernels.label_prop.ops import label_prop_round
+    from repro.core.label_prop import edges_to_ell, propagate, propagate_ell
+    from repro.core.graph_builder import EdgeList, symmetrize
+
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (64, 64))
+    c = jax.random.normal(jax.random.PRNGKey(1), (8192, 64))
+    row("kernel_topk_scoring(pallas-interpret)",
+        _timeit(lambda: topk_scores(q, c, k=8)), "k=8 n=8192")
+    row("kernel_topk_scoring(jnp-ref)",
+        _timeit(lambda: topk_scores_ref(q, c, k=8)), "k=8 n=8192")
+
+    n, kdeg = 4096, 16
+    nbr = jax.random.randint(key, (n, kdeg), -1, n)
+    wgt = jnp.abs(jax.random.normal(key, (n, kdeg)))
+    labels = jnp.arange(n, dtype=jnp.int32)
+    row("kernel_label_prop(pallas-interpret)",
+        _timeit(lambda: label_prop_round(labels, nbr, wgt)), f"n={n} K={kdeg}")
+
+    # sort-engine vs ELL-engine full LP (the §Perf trade for Alg. 2)
+    rng = np.random.default_rng(0)
+    u = rng.integers(0, n, 4 * n).astype(np.int32)
+    v = rng.integers(0, n, 4 * n).astype(np.int32)
+    w = rng.random(4 * n).astype(np.float32)
+    edges = EdgeList(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
+                     jnp.asarray(u != v))
+    src, dst, ww, val = symmetrize(edges)
+    f_sort = jax.jit(lambda: propagate(src, dst, ww, val, num_nodes=n,
+                                       rounds=3).labels)
+    nbr2, wgt2 = edges_to_ell(src, dst, ww, val, num_nodes=n, max_degree=32)
+    f_ell = jax.jit(lambda: propagate_ell(nbr2, wgt2, rounds=3).labels)
+    row("labelprop_sort_engine", _timeit(f_sort), f"E={4*n} rounds=3")
+    row("labelprop_ell_engine", _timeit(f_ell), f"E={4*n} rounds=3 K=32")
+
+
+# ---------------------------------------------------------------------------
+# Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
+# ---------------------------------------------------------------------------
+
+def bench_roofline(path="results/dryrun.json"):
+    if not os.path.exists(path):
+        row("roofline", 0.0, f"missing {path}; run repro.launch.dryrun first")
+        return
+    with open(path) as f:
+        cells = json.load(f)
+    ok = [c for c in cells if c.get("ok")]
+    n_bottleneck = {}
+    for c in ok:
+        if c["mesh"] != "single-pod-16x16":
+            continue
+        r = c["roofline"]
+        bot = r["bottleneck"].replace("_s", "")
+        n_bottleneck[bot] = n_bottleneck.get(bot, 0) + 1
+        row(f"roofline[{c['arch']}x{c['shape']}]",
+            max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            f"bottleneck={bot} compute={r['compute_s']*1e3:.2f}ms "
+            f"memory={r['memory_s']*1e3:.2f}ms "
+            f"collective={r['collective_s']*1e3:.2f}ms")
+    row("roofline_summary", 0.0,
+        " ".join(f"{k}:{v}" for k, v in sorted(n_bottleneck.items())))
+
+
+BENCHES = {
+    "fig4": bench_fig4,
+    "table1": bench_table1_table2,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of " + ",".join(BENCHES))
+    args = p.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

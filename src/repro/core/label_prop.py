@@ -1,0 +1,141 @@
+"""GraphSampler steps 1-3 — weighted label propagation (Algorithm 2).
+
+Paper semantics (Raghavan et al. [9], weighted variant):
+  init:   L(v) = v
+  round:  for each node v, over incident edges (v, u, w) aggregate
+          S(L) = sum of w over neighbours u with label L;
+          assign L*(v) = argmax_L S(L).
+  stop:   after a fixed number of rounds (LP is not guaranteed to converge).
+
+MapReduce -> JAX mapping: one round = one reduce-by-(dst, label) followed by
+one reduce-by-dst argmax. Both are sort + segment ops (DESIGN.md §2); the
+whole multi-round loop runs inside a single XLA computation via lax.scan
+(Spark pays a cluster-wide shuffle per round; we pay an on-device sort).
+
+Ties are broken toward the smaller label id — the paper leaves this
+unspecified; a deterministic rule makes the pipeline reproducible.
+
+``propagate_ell`` is the dense, degree-capped formulation that feeds the
+Pallas label_prop kernel (kernels/label_prop) — same semantics, different
+data layout (see ref.py there for the oracle correspondence).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import segment_utils as su
+
+
+class LabelPropResult(NamedTuple):
+    labels: jnp.ndarray           # i32[num_nodes] final community labels
+    changes_per_round: jnp.ndarray  # i32[rounds] nodes that changed label
+
+
+def _one_round(labels, src, dst, w, valid, num_nodes):
+    e = src.shape[0]
+    lab_src = labels[jnp.where(valid, src, 0)]
+    dst_k = jnp.where(valid, dst, num_nodes)           # sentinel sorts last
+    lab_k = jnp.where(valid, lab_src, su.I32_MAX)
+    w_m = jnp.where(valid, w, 0.0)
+
+    # reduce-by-(dst, label): sum of affinities per candidate label
+    (dsts, labs), (ws,) = su.sort_by((dst_k, lab_k), (w_m,))
+    starts = su.run_starts(dsts, labs)
+    seg = su.run_segment_ids(starts)
+    sums = su.segment_sum(ws, seg, num_segments=e)[seg]  # broadcast to rows
+
+    # reduce-by-dst: argmax_L sum, tie -> min label
+    dstarts = su.run_starts(dsts)
+    dseg = su.run_segment_ids(dstarts)
+    smax = su.segment_max(sums, dseg, num_segments=e)[dseg]
+    cand = jnp.where(sums == smax, labs, su.I32_MAX)
+    best = su.segment_min(cand, dseg, num_segments=e)
+
+    # one representative row per dst-run; scatter back (sentinel rows drop)
+    dst_of_seg = su.segment_min(dsts, dseg, num_segments=e)
+    new_labels = labels.at[dst_of_seg].set(
+        jnp.minimum(best, su.I32_MAX - 1).astype(labels.dtype), mode="drop")
+    # runs made only of sentinel rows produce I32_MAX candidates; they were
+    # dropped above because their dst is the sentinel num_nodes.
+    return new_labels
+
+
+def propagate(src, dst, w, valid, *, num_nodes: int, rounds: int) -> LabelPropResult:
+    """Run ``rounds`` of weighted label propagation over a directed edge list.
+
+    Use graph_builder.symmetrize() first for undirected graphs.
+    """
+    init = jnp.arange(num_nodes, dtype=jnp.int32)
+
+    def step(labels, _):
+        new = _one_round(labels, src, dst, w, valid, num_nodes)
+        changed = jnp.sum((new != labels).astype(jnp.int32))
+        return new, changed
+
+    labels, changes = lax.scan(step, init, None, length=rounds)
+    return LabelPropResult(labels, changes)
+
+
+# ---------------------------------------------------------------------------
+# Dense ELL formulation (feeds the Pallas kernel; also the vmap-able oracle)
+# ---------------------------------------------------------------------------
+
+def edges_to_ell(src, dst, w, valid, *, num_nodes: int, max_degree: int):
+    """Pack a directed edge list into ELL adjacency:
+    nbr i32[num_nodes, max_degree] (pad -1), wgt f32[num_nodes, max_degree].
+
+    Edges beyond ``max_degree`` per dst are dropped deterministically
+    (highest-weight edges kept), mirroring the fanout cap of Alg. 1.
+    """
+    e = src.shape[0]
+    dst_k = jnp.where(valid, dst, num_nodes)
+    negw = jnp.where(valid, -w, jnp.inf)
+    (dsts, _), (srcs, ws) = su.sort_by((dst_k, negw), (src, w))
+    starts = su.run_starts(dsts)
+    rank = su.group_rank(starts)
+    ok = (dsts < num_nodes) & (rank < max_degree)
+    row = jnp.where(ok, dsts, num_nodes)
+    col = jnp.where(ok, rank, 0)
+    nbr = jnp.full((num_nodes, max_degree), -1, jnp.int32)
+    nbr = nbr.at[row, col].set(srcs.astype(jnp.int32), mode="drop")
+    wgt = jnp.zeros((num_nodes, max_degree), jnp.float32)
+    wgt = wgt.at[row, col].set(ws, mode="drop")
+    return nbr, wgt
+
+
+def ell_round(labels, nbr, wgt):
+    """One LP round over ELL adjacency. O(N * K^2) but fully dense —
+    this is the computation the Pallas kernel implements on TPU.
+
+    For node n with neighbour labels l_k and weights w_k:
+      S(l_j) = sum_k w_k [l_k == l_j];  L* = argmax_j (S, -l_j).
+    Nodes with no neighbours keep their label.
+    """
+    mask = nbr >= 0                                        # (N, K)
+    lab = jnp.where(mask, labels[jnp.maximum(nbr, 0)], -1)  # (N, K)
+    w = jnp.where(mask, wgt, 0.0)
+    same = lab[:, :, None] == lab[:, None, :]               # (N, K, K)
+    scores = jnp.einsum("nkj,nk->nj", same.astype(w.dtype), w)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    # argmax with tie -> smaller label: exact two-pass (max score, min label)
+    smax = jnp.max(scores, axis=1, keepdims=True)
+    cand = jnp.where((scores == smax) & mask, lab, su.I32_MAX)
+    new = jnp.min(cand, axis=1)
+    has_nbr = jnp.any(mask, axis=1)
+    return jnp.where(has_nbr, new, labels).astype(labels.dtype)
+
+
+def propagate_ell(nbr, wgt, *, rounds: int) -> LabelPropResult:
+    num_nodes = nbr.shape[0]
+    init = jnp.arange(num_nodes, dtype=jnp.int32)
+
+    def step(labels, _):
+        new = ell_round(labels, nbr, wgt)
+        return new, jnp.sum((new != labels).astype(jnp.int32))
+
+    labels, changes = lax.scan(step, init, None, length=rounds)
+    return LabelPropResult(labels, changes)

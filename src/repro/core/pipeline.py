@@ -1,0 +1,85 @@
+"""WindTunnel pipeline orchestration: GraphBuilder -> GraphSampler ->
+CorpusReconstructor (paper Fig. 3), as one jit-able program.
+
+Two GraphSampler execution paths with identical semantics:
+  * ``engine='sort'`` — sort/segment label propagation (reference, unbounded
+    degree; the direct MapReduce port).
+  * ``engine='ell'``  — degree-capped dense ELL label propagation; this is
+    the layout the Pallas TPU kernel consumes (kernels/label_prop) and the
+    path the perf work optimizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import graph_builder as gb
+from repro.core import label_prop as lp
+from repro.core import reconstructor as rc
+from repro.core import sampler as sm
+
+
+@dataclasses.dataclass(frozen=True)
+class WindTunnelConfig:
+    """Configuration of the full sampling pipeline."""
+    tau_quantile: float = 0.5     # paper: 'scores in the top 50%'
+    fanout: int = 16              # per-query entity cap in Alg. 1 (ELL width)
+    lp_rounds: int = 5            # fixed LP round count (Alg. 2 termination)
+    max_degree: int = 32          # ELL engine: per-node neighbour cap
+    target_size: Optional[float] = None  # None -> paper's exact |L|/N rule
+    engine: str = "sort"          # 'sort' | 'ell'
+    seed: int = 0
+
+
+class WindTunnelResult(NamedTuple):
+    edges: gb.EdgeList
+    labels: jnp.ndarray
+    changes_per_round: jnp.ndarray
+    sample: sm.ClusterSample
+    reconstructed: rc.ReconstructedSample
+    degrees: jnp.ndarray
+
+
+def run_windtunnel(qrels: gb.QRelTable, *, num_queries: int,
+                   num_entities: int, config: WindTunnelConfig
+                   ) -> WindTunnelResult:
+    # --- GraphBuilder (Alg. 1) ---
+    edges = gb.build_affinity_graph(
+        qrels, num_queries=num_queries,
+        tau_quantile=config.tau_quantile, fanout=config.fanout)
+    degrees = gb.node_degrees(edges, num_entities)
+
+    # --- GraphSampler steps 1-3 (Alg. 2): label propagation ---
+    src, dst, w, valid = gb.symmetrize(edges)
+    if config.engine == "ell":
+        nbr, wgt = lp.edges_to_ell(src, dst, w, valid,
+                                   num_nodes=num_entities,
+                                   max_degree=config.max_degree)
+        lp_res = lp.propagate_ell(nbr, wgt, rounds=config.lp_rounds)
+    else:
+        lp_res = lp.propagate(src, dst, w, valid,
+                              num_nodes=num_entities,
+                              rounds=config.lp_rounds)
+
+    # --- GraphSampler step 4: cluster sampling (universe = graph nodes) ---
+    key = jax.random.PRNGKey(config.seed)
+    sample = sm.cluster_sample(lp_res.labels, key,
+                               num_nodes=num_entities,
+                               target_size=config.target_size,
+                               eligible=degrees > 0)
+
+    # --- CorpusReconstructor ---
+    recon = rc.reconstruct(qrels, sample.entity_mask, num_queries=num_queries)
+    return WindTunnelResult(edges, lp_res.labels, lp_res.changes_per_round,
+                            sample, recon, degrees)
+
+
+def run_uniform_baseline(qrels: gb.QRelTable, *, num_queries: int,
+                         num_entities: int, rate: float, seed: int = 0
+                         ) -> rc.ReconstructedSample:
+    """The uniform-random baseline the paper compares against."""
+    mask = sm.uniform_sample(num_entities, jax.random.PRNGKey(seed), rate=rate)
+    return rc.reconstruct(qrels, mask, num_queries=num_queries)

@@ -1,0 +1,88 @@
+"""GraphSampler step 4 — cluster sampling of communities (Algorithm 2).
+
+Paper semantics: after label propagation, 'Emit L with probability |L|/N'
+where |L| is the community size and N the total entity count. A kept label
+brings ALL of its entities into the sample (cluster sampling), so community
+neighbourhoods survive intact — the whole point of WindTunnel.
+
+Beyond-paper addition (flagged in DESIGN.md §6): ``target_size`` calibration.
+The paper's Table I uses a '100K passages' sample but |L|/N gives no direct
+size control (E[size] = sum |L|^2 / N). We keep the paper rule as default and
+optionally scale the keep-probabilities p_L = min(1, c*|L|/N), solving for c
+by bisection so E[size] hits the target. c = 1 recovers the paper exactly.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class ClusterSample(NamedTuple):
+    entity_mask: jnp.ndarray    # bool[num_nodes] kept entities
+    label_kept: jnp.ndarray     # bool[num_nodes] per-label keep decision
+    community_sizes: jnp.ndarray  # i32[num_nodes] |L| per label id
+    keep_prob: jnp.ndarray      # f32[num_nodes] p_L actually used
+
+
+def community_sizes(labels: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
+    return jax.ops.segment_sum(
+        jnp.ones_like(labels), labels, num_segments=num_nodes)
+
+
+def _calibrate_scale(sizes: jnp.ndarray, n_total: jnp.ndarray,
+                     target: float, iters: int = 40) -> jnp.ndarray:
+    """Bisection for c with sum_L min(1, c*|L|/N) * |L| == target."""
+    sizes_f = sizes.astype(jnp.float32)
+
+    def expected(c):
+        p = jnp.minimum(1.0, c * sizes_f / n_total)
+        return jnp.sum(p * sizes_f)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_small = expected(mid) < target
+        return jnp.where(too_small, mid, lo), jnp.where(too_small, hi, mid)
+
+    lo, hi = lax.fori_loop(0, iters, body,
+                           (jnp.float32(0.0), jnp.float32(n_total)))
+    return 0.5 * (lo + hi)
+
+
+def cluster_sample(labels: jnp.ndarray, key: jax.Array, *,
+                   num_nodes: int,
+                   target_size: Optional[float] = None,
+                   eligible: Optional[jnp.ndarray] = None) -> ClusterSample:
+    """Sample communities. ``labels`` from label_prop.propagate.
+
+    Every node whose label is kept is kept. The Bernoulli draw is keyed per
+    label id, so the decision for a community is a pure function of
+    (key, label) — reproducible regardless of sharding.
+
+    ``eligible`` restricts the sampling universe to nodes that appear in
+    the affinity graph (Alg. 2's input is the GraphBuilder's edge tuples, so
+    degree-0 auxiliary entities never enter the GraphSampler).
+    """
+    if eligible is None:
+        eligible = jnp.ones_like(labels, bool)
+    lab_e = jnp.where(eligible, labels, num_nodes)
+    sizes = jax.ops.segment_sum(jnp.ones_like(labels), lab_e,
+                                num_segments=num_nodes + 1)[:num_nodes]
+    n_total = jnp.maximum(jnp.sum(eligible.astype(jnp.float32)), 1.0)
+    p = sizes.astype(jnp.float32) / n_total          # the paper's |L|/N
+    if target_size is not None:
+        c = _calibrate_scale(sizes, n_total, float(target_size))
+        p = jnp.minimum(1.0, c * p)
+    unif = jax.random.uniform(key, (num_nodes,))
+    label_kept = (unif < p) & (sizes > 0)
+    entity_mask = label_kept[labels] & eligible
+    return ClusterSample(entity_mask, label_kept, sizes, p)
+
+
+def uniform_sample(num_nodes: int, key: jax.Array, *, rate: float) -> jnp.ndarray:
+    """The paper's baseline: uniform random entity sampling (Section I-A),
+    which destroys community structure and inflates precision."""
+    return jax.random.uniform(key, (num_nodes,)) < rate

@@ -1,0 +1,13 @@
+"""Data substrate: synthetic corpora/QRel generation, batching, neighbour
+sampling. MSMarco is unavailable offline; data/synthetic.py generates a
+corpus whose QRel graph is calibrated to the paper's measured statistics
+(Yule-Simon degree law, gamma ~ 3) so Fig. 4 / Tables I-II reproduce
+directionally (DESIGN.md §6).
+"""
+from repro.data.synthetic import (SyntheticCorpus, generate_qrels,
+                                  generate_corpus)
+from repro.data.batching import TokenBatcher
+from repro.data.neighbor_sampler import NeighborSampler
+
+__all__ = ["SyntheticCorpus", "generate_qrels", "generate_corpus",
+           "TokenBatcher", "NeighborSampler"]

@@ -1,0 +1,8 @@
+"""Distributed runtime: logical-axis sharding rules (DP/TP/EP/SP),
+error-feedback gradient compression for the cross-pod all-reduce, and
+collective helpers."""
+from repro.distributed.sharding import (tree_shardings, logical_to_spec,
+                                        LM_RULES, RECSYS_RULES, GNN_RULES)
+
+__all__ = ["tree_shardings", "logical_to_spec", "LM_RULES", "RECSYS_RULES",
+           "GNN_RULES"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the compute hot spots of the WindTunnel pipeline:
+
+* topk_scoring    — fused candidate scoring + running top-k (ANN / IVF probe
+                    / retrieval_cand hot path; paper Fig. 5 online ranking)
+* flash_attention — fused online-softmax attention (embedding/indexing cost,
+                    the dominant FLOPs of the paper's offline stage)
+* label_prop      — one weighted label-propagation round over ELL adjacency
+                    (GraphSampler hot loop, Alg. 2 steps 1-3)
+* lsh_hamming     — packed sign-LSH Hamming scoring (Grale-style edge
+                    building and the LSH index of Fig. 5)
+
+Each kernel ships <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+dispatch wrapper; interpret=True off-TPU) and ref.py (pure-jnp oracle swept
+against the kernel in tests/test_kernels_*.py).
+"""

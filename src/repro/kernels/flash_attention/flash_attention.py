@@ -1,0 +1,114 @@
+"""Flash-attention Pallas kernel (GQA, causal / bidirectional / sliding
+window), TPU-tiled.
+
+Grid = (batch*kv_heads*group, q_blocks, kv_blocks) with the kv dimension
+'arbitrary' (sequential): online-softmax statistics (m, l, acc) persist in
+VMEM scratch across kv steps and the output block is written on the last
+step. Q/K/V stream through VMEM in (block_q, d) / (block_kv, d) tiles —
+(S, S) scores never touch HBM, which is the whole point: at 32k context the
+naive score matrix is ~4GB per (batch, head) while VMEM tiles are ~1MB.
+
+MXU alignment: block_q/block_kv default to 128-multiples; d_head is padded
+to 128 by ops.py if needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  block_q: int, block_kv: int, n_kv: int, causal: bool,
+                  window, scale: float):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # (bq, d)
+    k = k_ref[0]                                   # (bkv, d)
+    v = v_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * block_kv + lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc_new = acc_prev * alpha[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(kj == n_kv - 1)
+    def _emit():
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                              "interpret", "scale"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window=None,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = False, scale=None):
+    """q: (B, Sq, H, D), k/v: (B, Skv, Hkv, D) with H % Hkv == 0.
+    Returns (B, Sq, H, D). Sq % block_q == 0, Skv % block_kv == 0."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = (1.0 / np.sqrt(d)) if scale is None else float(scale)
+    nq, nkv = sq // block_q, skv // block_kv
+
+    # layout: fold (b, hkv, g) into one parallel grid axis
+    qf = q.reshape(b, sq, hkv, g, d).transpose(0, 2, 3, 1, 4) \
+          .reshape(b * hkv * g, sq, d)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), g,
+                    axis=0)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d), g,
+                    axis=0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, block_q=block_q, block_kv=block_kv,
+                          n_kv=nkv, causal=causal, window=window,
+                          scale=scale),
+        grid=(b * h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, block_kv, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # m
+            pltpu.VMEM((block_q,), jnp.float32),        # l
+            pltpu.VMEM((block_q, d), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hkv, g, sq, d).transpose(0, 3, 1, 2, 4) \
+              .reshape(b, sq, h, d)

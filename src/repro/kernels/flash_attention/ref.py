@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash_attention kernel (naive softmax attention
+with GQA + causal/window masks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qh = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh, k).astype(jnp.float32)
+    s = s / np.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, h, d)

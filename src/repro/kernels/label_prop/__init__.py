@@ -1,0 +1,4 @@
+from repro.kernels.label_prop.ops import label_prop_round
+from repro.kernels.label_prop import ref
+
+__all__ = ["label_prop_round", "ref"]

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the label_prop kernel — must agree exactly with
+core.label_prop.ell_round (same semantics, same tie-break)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def label_prop_round_ref(nbr_labels, wgt, labels):
+    mask = nbr_labels >= 0
+    wm = jnp.where(mask, wgt, 0.0)
+    same = (nbr_labels[:, :, None] == nbr_labels[:, None, :]).astype(jnp.float32)
+    scores = jnp.einsum("nkj,nk->nj", same, wm)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    smax = jnp.max(scores, axis=1, keepdims=True)
+    cand = jnp.where((scores == smax) & mask, nbr_labels, _I32_MAX)
+    best = jnp.min(cand, axis=1)
+    has_nbr = jnp.any(mask, axis=1)
+    return jnp.where(has_nbr, best, labels).astype(jnp.int32)

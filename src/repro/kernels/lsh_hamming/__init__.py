@@ -1,0 +1,4 @@
+from repro.kernels.lsh_hamming.ops import hamming_topk
+from repro.kernels.lsh_hamming import ref
+
+__all__ = ["hamming_topk", "ref"]

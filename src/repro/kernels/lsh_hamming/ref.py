@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for lsh_hamming."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.retrieval.lsh import popcount32
+
+
+def hamming_topk_ref(q_codes, c_codes, *, k: int):
+    ham = popcount32(q_codes[:, None, :] ^ c_codes[None]).sum(-1)
+    top_s, top_i = lax.top_k(-ham.astype(jnp.float32), k)
+    return top_s, top_i.astype(jnp.int32)

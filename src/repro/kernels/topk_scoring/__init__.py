@@ -1,0 +1,4 @@
+from repro.kernels.topk_scoring.ops import topk_scores
+from repro.kernels.topk_scoring import ref
+
+__all__ = ["topk_scores", "ref"]

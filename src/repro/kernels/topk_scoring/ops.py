@@ -1,0 +1,49 @@
+"""jit'd dispatch wrapper for topk_scoring: pads to block multiples, selects
+interpret mode off-TPU, falls back to the jnp oracle for k > 32 (the
+repeated-max extraction stops paying for itself)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_scoring import ref
+from repro.kernels.topk_scoring.topk_scoring import topk_scores_pallas
+
+_MAX_KERNEL_K = 32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
+                                             "use_kernel"))
+def topk_scores(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
+                block_q: int = 128, block_n: int = 1024,
+                use_kernel: bool = True):
+    """Top-k inner-product search: (Q, D) x (N, D) -> (Q, k) scores/ids."""
+    if not use_kernel or k > _MAX_KERNEL_K:
+        return ref.topk_scores_ref(queries, corpus, k=k)
+    qn, d = queries.shape
+    n = corpus.shape[0]
+    bq = min(block_q, max(8, qn))
+    bn = min(block_n, max(128, n))
+    pad_q = (-qn) % bq
+    pad_n = (-n) % bn
+    # sentinel coordinate: query coord 1, real candidates 0, padding -BIG —
+    # padded rows then score -BIG and can never displace real candidates
+    qp = jnp.pad(queries.astype(jnp.float32), ((0, pad_q), (0, 1)),
+                 constant_values=1.0)
+    qp = qp.at[:, d].set(1.0)
+    cp = jnp.pad(corpus.astype(jnp.float32), ((0, pad_n), (0, 1)))
+    if pad_n:
+        cp = cp.at[n:, d].set(-1e30)
+    s, i = topk_scores_pallas(qp, cp, k=k, block_q=bq, block_n=bn,
+                              interpret=not _on_tpu())
+    if pad_n:
+        bad = i >= n
+        s = jnp.where(bad, -jnp.inf, s)
+        i = jnp.where(bad, -1, i)
+    return s[:qn], i[:qn]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the topk_scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def topk_scores_ref(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int):
+    scores = (queries @ corpus.T).astype(jnp.float32)
+    top_s, top_i = lax.top_k(scores, k)
+    return top_s, top_i.astype(jnp.int32)

@@ -1,0 +1,2 @@
+"""Launchers: production mesh builders, the multi-pod dry-run, training and
+sampling CLIs."""

@@ -1,0 +1,12 @@
+"""Model zoo: one composable transformer family covering the five assigned
+LM architectures (dense + MoE, GQA/MQA, RoPE, sliding-window / chunked
+attention, GeGLU/SwiGLU, scanned layers, KV-cache serving); four recsys
+rankers over a shared EmbeddingBag substrate; and an E(3)-equivariant MACE
+implementation with its own spherical-harmonic / Clebsch-Gordan machinery.
+"""
+from repro.models.transformer import (TransformerConfig, MoEConfig,
+                                      init_transformer, transformer_forward,
+                                      lm_loss, decode_step, init_kv_cache)
+
+__all__ = ["TransformerConfig", "MoEConfig", "init_transformer",
+           "transformer_forward", "lm_loss", "decode_step", "init_kv_cache"]

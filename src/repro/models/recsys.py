@@ -1,0 +1,400 @@
+"""RecSys ranking models: AutoInt, DCN-v2, DIEN (AUGRU), DLRM (MLPerf).
+
+Shared substrate: **EmbeddingBag implemented from scratch** — JAX has no
+native EmbeddingBag or CSR sparse, so lookups are `jnp.take` and multi-hot
+bags are gather + `jax.ops.segment_sum` (assignment: "this IS part of the
+system"). Tables are per-field arrays so each can shard independently
+(row-sharded over the mesh ``model`` axis).
+
+The ``retrieval_cand`` shape (1 query x 1M candidates) is served by
+``retrieval_scores`` — one batched matmul against the item table feeding the
+fused top-k kernel (kernels/topk_scoring), never a loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# Criteo cardinalities: Kaggle display-advertising (AutoInt/DCN-family) and
+# Terabyte (MLPerf DLRM). Public values from the respective benchmarks.
+CRITEO_KAGGLE_CARDS = (
+    1460, 583, 10131227, 2202608, 305, 24, 12517, 633, 3, 93145, 5683,
+    8351593, 3194, 27, 14992, 5461306, 10, 5652, 2173, 4, 7046547, 18, 15,
+    286181, 105, 142572)
+CRITEO_TB_CARDS = (
+    45833188, 36746, 17245, 7413, 20243, 3, 7114, 1441, 62, 29275261,
+    1572176, 345138, 10, 2209, 11267, 128, 4, 974, 14, 48937457, 11316796,
+    40094537, 452104, 12606, 104, 35)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    arch: str                      # autoint | dcn_v2 | dien | dlrm
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    vocab_sizes: Sequence[int] = CRITEO_KAGGLE_CARDS
+    # autoint
+    n_attn_layers: int = 3
+    n_heads: int = 2
+    d_attn: int = 32
+    # dcn-v2
+    n_cross_layers: int = 3
+    mlp_dims: Sequence[int] = (1024, 1024, 512)
+    # dlrm
+    bot_mlp: Sequence[int] = (512, 256, 128)
+    top_mlp: Sequence[int] = (1024, 1024, 512, 256, 1)
+    # dien
+    seq_len: int = 100
+    gru_dim: int = 108
+    dien_mlp: Sequence[int] = (200, 80)
+    item_vocab: int = 1_000_000
+    cat_vocab: int = 10_000
+    dtype: Any = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# EmbeddingBag substrate
+# ---------------------------------------------------------------------------
+
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Single-hot lookup: plain row gather."""
+    return jnp.take(table, ids, axis=0)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  offsets: jnp.ndarray, *, num_bags: int,
+                  weights: Optional[jnp.ndarray] = None,
+                  mode: str = "sum") -> jnp.ndarray:
+    """torch.nn.EmbeddingBag semantics with (ids, offsets) layout.
+
+    ids i32[nnz], offsets i32[num_bags] (bag b spans ids[offsets[b]:offsets[b+1]]).
+    Implemented as gather + segment reduction.
+    """
+    nnz = ids.shape[0]
+    seg = jnp.searchsorted(offsets, jnp.arange(nnz, dtype=offsets.dtype),
+                           side="right") - 1
+    rows = jnp.take(table, ids, axis=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, seg, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, seg, num_segments=num_bags)
+        c = jax.ops.segment_sum(jnp.ones((nnz, 1), rows.dtype), seg,
+                                num_segments=num_bags)
+        return s / jnp.maximum(c, 1.0)
+    if mode == "max":
+        return jax.ops.segment_max(rows, seg, num_segments=num_bags)
+    raise ValueError(mode)
+
+
+def masked_bag(table: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray,
+               mode: str = "sum") -> jnp.ndarray:
+    """Dense (B, nnz) multi-hot bag with mask — the padded-batch layout."""
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)
+    rows = rows * mask[..., None].astype(rows.dtype)
+    if mode == "sum":
+        return rows.sum(1)
+    if mode == "mean":
+        return rows.sum(1) / jnp.maximum(mask.sum(1, keepdims=True), 1.0)
+    raise ValueError(mode)
+
+
+def _pad_rows(v: int, multiple: int = 256) -> int:
+    """Embedding tables are row-sharded over the mesh 'model' axis; rows are
+    padded to a 256 multiple (covers any axis size up to a full 256-chip
+    pod). Padding rows are never indexed."""
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def _field_tables(key, cfg: RecsysConfig, dim: int, cards) -> dict:
+    keys = jax.random.split(key, len(cards))
+    return {f"table_{i}": (jax.random.normal(keys[i], (_pad_rows(v), dim)) /
+                           np.sqrt(dim)).astype(cfg.dtype)
+            for i, v in enumerate(cards)}
+
+
+def field_embeddings(tables: dict, sparse_ids: jnp.ndarray) -> jnp.ndarray:
+    """(B, n_fields) ids -> (B, n_fields, D), one table per field."""
+    cols = [embedding_lookup(tables[f"table_{i}"], sparse_ids[:, i])
+            for i in range(sparse_ids.shape[1])]
+    return jnp.stack(cols, axis=1)
+
+
+def _mlp_init(key, dims, cfg, in_dim):
+    params = []
+    for i, d in enumerate(dims):
+        key, k1 = jax.random.split(key)
+        params.append({
+            "w": (jax.random.normal(k1, (in_dim, d)) / np.sqrt(in_dim)).astype(cfg.dtype),
+            "b": jnp.zeros((d,), cfg.dtype)})
+        in_dim = d
+    return params
+
+
+def _mlp_apply(params, x, final_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# DLRM (MLPerf config)
+# ---------------------------------------------------------------------------
+
+def init_dlrm(key, cfg: RecsysConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    n_f = cfg.n_sparse + 1
+    n_inter = n_f * (n_f - 1) // 2
+    return {
+        "tables": _field_tables(k1, cfg, d, cfg.vocab_sizes),
+        "bot": _mlp_init(k2, cfg.bot_mlp, cfg, cfg.n_dense),
+        "top": _mlp_init(k3, cfg.top_mlp, cfg, n_inter + d),
+    }
+
+
+def dlrm_forward(params, batch, cfg: RecsysConfig):
+    dense = _mlp_apply(params["bot"], batch["dense"], final_act=True)  # (B,D)
+    emb = field_embeddings(params["tables"], batch["sparse"])          # (B,F,D)
+    feats = jnp.concatenate([dense[:, None, :], emb], axis=1)          # (B,F+1,D)
+    inter = jnp.einsum("bfd,bgd->bfg", feats, feats)
+    iu, ju = jnp.triu_indices(feats.shape[1], k=1)
+    flat = inter[:, iu, ju]                                            # (B,F(F-1)/2)
+    x = jnp.concatenate([flat, dense], axis=-1)
+    return _mlp_apply(params["top"], x)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DCN-v2
+# ---------------------------------------------------------------------------
+
+def init_dcn_v2(key, cfg: RecsysConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d0 = cfg.n_dense + cfg.n_sparse * cfg.embed_dim
+    cross = []
+    for i in range(cfg.n_cross_layers):
+        k2, kk = jax.random.split(k2)
+        cross.append({"w": (jax.random.normal(kk, (d0, d0)) / np.sqrt(d0)
+                            ).astype(cfg.dtype),
+                      "b": jnp.zeros((d0,), cfg.dtype)})
+    deep = _mlp_init(k3, cfg.mlp_dims, cfg, d0)
+    k3, kk = jax.random.split(k3)
+    head_in = d0 + cfg.mlp_dims[-1]
+    return {"tables": _field_tables(k1, cfg, cfg.embed_dim, cfg.vocab_sizes),
+            "cross": cross, "deep": deep,
+            "head": {"w": (jax.random.normal(kk, (head_in, 1)) /
+                           np.sqrt(head_in)).astype(cfg.dtype),
+                     "b": jnp.zeros((1,), cfg.dtype)}}
+
+
+def dcn_v2_forward(params, batch, cfg: RecsysConfig):
+    emb = field_embeddings(params["tables"], batch["sparse"])
+    x0 = jnp.concatenate([batch["dense"], emb.reshape(emb.shape[0], -1)], -1)
+    x = x0
+    for lyr in params["cross"]:                  # x_{l+1} = x0 ⊙ (W x_l + b) + x_l
+        x = x0 * (x @ lyr["w"] + lyr["b"]) + x
+    deep = _mlp_apply(params["deep"], x0, final_act=True)
+    z = jnp.concatenate([x, deep], -1)
+    return (z @ params["head"]["w"] + params["head"]["b"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# AutoInt
+# ---------------------------------------------------------------------------
+
+def init_autoint(key, cfg: RecsysConfig):
+    # 39 fields on Criteo = 13 bucketised dense + 26 categorical
+    cards = tuple([1000] * (cfg.n_sparse - len(cfg.vocab_sizes))) + tuple(cfg.vocab_sizes) \
+        if cfg.n_sparse > len(cfg.vocab_sizes) else tuple(cfg.vocab_sizes[:cfg.n_sparse])
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, da, h = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    layers = []
+    in_d = d
+    for i in range(cfg.n_attn_layers):
+        k2, kq, kk, kv, kr = jax.random.split(k2, 5)
+        layers.append({
+            "wq": (jax.random.normal(kq, (in_d, h * da)) / np.sqrt(in_d)).astype(cfg.dtype),
+            "wk": (jax.random.normal(kk, (in_d, h * da)) / np.sqrt(in_d)).astype(cfg.dtype),
+            "wv": (jax.random.normal(kv, (in_d, h * da)) / np.sqrt(in_d)).astype(cfg.dtype),
+            "wres": (jax.random.normal(kr, (in_d, h * da)) / np.sqrt(in_d)).astype(cfg.dtype),
+        })
+        in_d = h * da
+    head_in = cfg.n_sparse * in_d
+    return {"tables": _field_tables(k1, cfg, d, cards),
+            "attn": layers,
+            "head": {"w": (jax.random.normal(k3, (head_in, 1)) /
+                           np.sqrt(head_in)).astype(cfg.dtype),
+                     "b": jnp.zeros((1,), cfg.dtype)}}
+
+
+def autoint_forward(params, batch, cfg: RecsysConfig):
+    x = field_embeddings(params["tables"], batch["sparse"])  # (B,F,D)
+    h, da = cfg.n_heads, cfg.d_attn
+    for lyr in params["attn"]:
+        b, f, d = x.shape
+        q = (x @ lyr["wq"]).reshape(b, f, h, da)
+        k = (x @ lyr["wk"]).reshape(b, f, h, da)
+        v = (x @ lyr["wv"]).reshape(b, f, h, da)
+        logits = jnp.einsum("bfhd,bghd->bhfg", q, k) / np.sqrt(da)
+        p = jax.nn.softmax(logits, -1)
+        o = jnp.einsum("bhfg,bghd->bfhd", p, v).reshape(b, f, h * da)
+        x = jax.nn.relu(o + x @ lyr["wres"])
+    flat = x.reshape(x.shape[0], -1)
+    return (flat @ params["head"]["w"] + params["head"]["b"])[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# DIEN (GRU + attention + AUGRU)
+# ---------------------------------------------------------------------------
+
+def _gru_init(key, in_dim, hid, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"wx": (jax.random.normal(k1, (in_dim, 3 * hid)) /
+                   np.sqrt(in_dim)).astype(cfg.dtype),
+            "wh": (jax.random.normal(k2, (hid, 3 * hid)) /
+                   np.sqrt(hid)).astype(cfg.dtype),
+            "b": jnp.zeros((3 * hid,), cfg.dtype)}
+
+
+def _gru_cell(p, h, x, att=None):
+    """Standard GRU; if ``att`` given, AUGRU: update gate scaled by attention."""
+    hid = h.shape[-1]
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    r = jax.nn.sigmoid(gates[..., :hid])
+    z = jax.nn.sigmoid(gates[..., hid:2 * hid])
+    n = jnp.tanh(gates[..., 2 * hid:] + (r - 1.0) * (h @ p["wh"][:, 2 * hid:]))
+    if att is not None:
+        z = z * att[..., None]
+    return (1.0 - z) * n + z * h
+
+
+def init_dien(key, cfg: RecsysConfig):
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    d = cfg.embed_dim            # 18 for item and category each
+    in_dim = 2 * d               # concat(item, cat) = 36
+    hid = cfg.gru_dim
+    mlp_in = hid + in_dim
+    return {
+        "item_table": (jax.random.normal(k1, (_pad_rows(cfg.item_vocab), d)) /
+                       np.sqrt(d)).astype(cfg.dtype),
+        "cat_table": (jax.random.normal(k2, (_pad_rows(cfg.cat_vocab), d)) /
+                      np.sqrt(d)).astype(cfg.dtype),
+        "gru1": _gru_init(k3, in_dim, hid, cfg),
+        "augru": _gru_init(k4, hid, hid, cfg),
+        "att": {"w": (jax.random.normal(k5, (hid + in_dim, 1)) /
+                      np.sqrt(hid + in_dim)).astype(cfg.dtype)},
+        "mlp": _mlp_init(k6, tuple(cfg.dien_mlp) + (1,), cfg, mlp_in),
+    }
+
+
+def dien_forward(params, batch, cfg: RecsysConfig):
+    it = embedding_lookup(params["item_table"], batch["hist_items"])   # (B,T,d)
+    ct = embedding_lookup(params["cat_table"], batch["hist_cats"])
+    seq = jnp.concatenate([it, ct], -1)                                # (B,T,2d)
+    tgt = jnp.concatenate([
+        embedding_lookup(params["item_table"], batch["target_item"]),
+        embedding_lookup(params["cat_table"], batch["target_cat"])], -1)
+    mask = batch["hist_mask"].astype(seq.dtype)                        # (B,T)
+
+    def gru1_step(h, xs):
+        x, m = xs
+        hn = _gru_cell(params["gru1"], h, x)
+        return jnp.where(m[:, None] > 0, hn, h), jnp.where(m[:, None] > 0, hn, h)
+
+    b, t, _ = seq.shape
+    h0 = jnp.zeros((b, cfg.gru_dim), seq.dtype)
+    _, states = lax.scan(gru1_step, h0, (seq.transpose(1, 0, 2), mask.T))
+    states = states.transpose(1, 0, 2)                                 # (B,T,H)
+
+    att_in = jnp.concatenate(
+        [states, jnp.broadcast_to(tgt[:, None], (b, t, tgt.shape[-1]))], -1)
+    att_logit = (att_in @ params["att"]["w"])[..., 0]
+    att_logit = jnp.where(mask > 0, att_logit, -1e30)
+    att = jax.nn.softmax(att_logit, -1)                                # (B,T)
+
+    def augru_step(h, xs):
+        x, a, m = xs
+        hn = _gru_cell(params["augru"], h, x, att=a)
+        return jnp.where(m[:, None] > 0, hn, h), None
+
+    hT, _ = lax.scan(augru_step, h0,
+                     (states.transpose(1, 0, 2), att.T, mask.T))
+    z = jnp.concatenate([hT, tgt], -1)
+    return _mlp_apply(params["mlp"], z)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Common: loss, retrieval scoring
+# ---------------------------------------------------------------------------
+
+ARCHS = {
+    "autoint": (init_autoint, autoint_forward),
+    "dcn_v2": (init_dcn_v2, dcn_v2_forward),
+    "dien": (init_dien, dien_forward),
+    "dlrm": (init_dlrm, dlrm_forward),
+}
+
+
+def init_recsys(key, cfg: RecsysConfig):
+    return ARCHS[cfg.arch][0](key, cfg)
+
+
+def recsys_forward(params, batch, cfg: RecsysConfig):
+    return ARCHS[cfg.arch][1](params, batch, cfg)
+
+
+def bce_loss(params, batch, cfg: RecsysConfig):
+    logit = recsys_forward(params, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    logit = logit.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logit, 0) - logit * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logit))))
+
+
+def user_vector(params, batch, cfg: RecsysConfig) -> jnp.ndarray:
+    """Query-side tower for retrieval_cand scoring (per-arch)."""
+    if cfg.arch == "dlrm":
+        return _mlp_apply(params["bot"], batch["dense"], final_act=True)
+    if cfg.arch == "dien":
+        it = embedding_lookup(params["item_table"], batch["hist_items"])
+        ct = embedding_lookup(params["cat_table"], batch["hist_cats"])
+        seq = jnp.concatenate([it, ct], -1)
+        m = batch["hist_mask"][..., None].astype(seq.dtype)
+        return (seq * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+    # autoint / dcn_v2: mean of field embeddings
+    emb = field_embeddings(params["tables"], batch["sparse"])
+    return emb.mean(1)
+
+
+def item_matrix(params, cfg: RecsysConfig) -> jnp.ndarray:
+    """Candidate-side embedding matrix used for retrieval scoring."""
+    if cfg.arch == "dien":
+        return jnp.concatenate(
+            [params["item_table"],
+             jnp.zeros((params["item_table"].shape[0], cfg.embed_dim),
+                       params["item_table"].dtype)], -1)
+    # largest categorical table acts as the item corpus
+    big = max(range(len(cfg.vocab_sizes)), key=lambda i: cfg.vocab_sizes[i])
+    return params["tables"][f"table_{big}"]
+
+
+def item_matrix_dim(cfg: RecsysConfig) -> int:
+    return 2 * cfg.embed_dim if cfg.arch == "dien" else cfg.embed_dim
+
+
+def retrieval_scores(params, batch, cfg: RecsysConfig,
+                     candidate_ids: jnp.ndarray) -> jnp.ndarray:
+    """Score one query batch against a candidate set: (B, n_cand) dots.
+    Top-k selection happens in kernels/topk_scoring."""
+    u = user_vector(params, batch, cfg)                       # (B, D)
+    items = jnp.take(item_matrix(params, cfg), candidate_ids, axis=0)
+    return u @ items.T

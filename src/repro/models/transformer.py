@@ -1,0 +1,652 @@
+"""One composable transformer covering all five assigned LM architectures.
+
+Dense or MoE FFN, GQA/MQA, RoPE, full / sliding-window / chunked-causal
+attention, GeGLU/SwiGLU/GELU, tied or untied embeddings, scanned layers
+(O(1) HLO size in depth — critical for 48-56 layer dry-run compiles on one
+CPU core), selectable remat, and a KV-cache decode path (rolling buffer for
+windowed archs, which is what makes the long_500k cells sub-quadratic).
+
+Design notes
+------------
+* Params are plain pytrees (dict of jnp arrays); every leaf has a parallel
+  entry of *logical axis names* (``param_logical_axes``) which
+  distributed/sharding.py maps to mesh PartitionSpecs via per-arch rules —
+  the MaxText pattern, so DP/TP/EP/SP changes never touch model code.
+* Layer stack is ``lax.scan`` over stacked (L, ...) params.
+* Attention has a naive reference and a blocked online-softmax
+  implementation (flash-attention algorithm in pure JAX; the Pallas kernel
+  in kernels/flash_attention implements the same tiling for TPU). Blocked is
+  the default above ``block_q`` tokens — materialising (B, H, S, S) scores
+  at 32k context is exactly the memory-roofline failure §Perf documents.
+* MoE uses group-local top-k routing with capacity dropping (GShard/MaxText
+  style): tokens compete within their own batch row, dispatch/combine are
+  one-hot scatters, expert compute is a single einsum so the ``experts``
+  axis shards cleanly over the mesh ``model`` axis (EP).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    d_head: Optional[int] = None          # default d_model // n_heads
+    activation: str = "swiglu"            # swiglu | geglu | gelu
+    moe: Optional[MoEConfig] = None
+    rope_theta: float = 10_000.0
+    window: Optional[int] = None          # sliding-window attention size
+    attention_chunk: Optional[int] = None  # llama4-style chunked attention
+    causal: bool = True                   # False -> bidirectional encoder
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    embed_scale: bool = False             # gemma scales embeds by sqrt(d)
+    dtype: Any = jnp.bfloat16             # activation/compute dtype
+    param_dtype: Any = jnp.float32
+    remat: str = "none"                   # none | full
+    block_q: int = 1024                   # blocked-attention thresholds
+    block_kv: int = 1024
+    vocab_chunks: int = 1                 # >1 -> blocked cross-entropy
+    use_flash_kernel: bool = False        # route attention to Pallas kernel
+    # activation sharding constraints (set by launch/cells.py per mesh):
+    # batch dims -> act_batch_axes, head/ffn/vocab dims -> act_model_axis.
+    # Without these GSPMD may partition contraction dims instead of tokens,
+    # replicating activations 16x (measured; see EXPERIMENTS.md §Dry-run).
+    act_batch_axes: Optional[tuple] = None
+    act_model_axis: Optional[str] = None
+    # attention activation sharding: 'heads' when n_heads fills the model
+    # axis, else 'dh' (MQA/small-H archs like gemma-2b pad heads 2x+ and
+    # trigger involuntary SPMD remat — measured; see EXPERIMENTS.md §Perf)
+    attn_shard: str = "heads"
+    # Megatron-style sequence parallelism: shard the residual stream's seq
+    # dim over the model axis between blocks, so layer-boundary activations
+    # (what remat must save) shrink by the TP width. Enabled by cells.py
+    # for train/prefill when seq_len divides the model axis.
+    seq_parallel: bool = False
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameter init + logical axes
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis, dtype):
+    fan_in = np.prod([shape[a] for a in np.atleast_1d(in_axis)])
+    return (jax.random.normal(key, shape) / np.sqrt(fan_in)).astype(dtype)
+
+
+def init_transformer(key: jax.Array, cfg: TransformerConfig):
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    pd = cfg.param_dtype
+    keys = jax.random.split(key, 12)
+    glu = cfg.activation in ("swiglu", "geglu")
+    wi_cols = 2 * F if glu else F
+
+    layers = {
+        "ln1": jnp.ones((L, D), pd),
+        "ln2": jnp.ones((L, D), pd),
+        "wq": _dense_init(keys[0], (L, D, h * dh), 1, pd),
+        "wk": _dense_init(keys[1], (L, D, hkv * dh), 1, pd),
+        "wv": _dense_init(keys[2], (L, D, hkv * dh), 1, pd),
+        "wo": _dense_init(keys[3], (L, h * dh, D), 1, pd),
+    }
+    if cfg.moe is None:
+        layers["wi"] = _dense_init(keys[4], (L, D, wi_cols), 1, pd)
+        layers["wo_ff"] = _dense_init(keys[5], (L, F, D), 1, pd)
+    else:
+        E = cfg.moe.num_experts
+        layers["router"] = _dense_init(keys[6], (L, D, E), 1, pd)
+        layers["wi"] = _dense_init(keys[7], (L, E, D, wi_cols), 2, pd)
+        layers["wo_ff"] = _dense_init(keys[8], (L, E, F, D), 2, pd)
+
+    params = {
+        "embed": _dense_init(keys[9], (V, D), 1, pd),
+        "layers": layers,
+        "ln_f": jnp.ones((D,), pd),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(keys[10], (D, V), 0, pd)
+    return params
+
+
+def param_logical_axes(cfg: TransformerConfig):
+    """Logical axis names per parameter dim (sharding rules map these)."""
+    glu_cols = "ffn"
+    layers = {
+        "ln1": ("layers", "embed_noshard"),
+        "ln2": ("layers", "embed_noshard"),
+        "wq": ("layers", "embed", "qkv_features"),
+        "wk": ("layers", "embed", "kv_features"),
+        "wv": ("layers", "embed", "kv_features"),
+        "wo": ("layers", "qkv_features", "embed"),
+    }
+    if cfg.moe is None:
+        layers["wi"] = ("layers", "embed", glu_cols)
+        layers["wo_ff"] = ("layers", "ffn", "embed")
+    else:
+        layers["router"] = ("layers", "embed", "experts_noshard")
+        layers["wi"] = ("layers", "experts", "embed", glu_cols)
+        layers["wo_ff"] = ("layers", "experts", "ffn", "embed")
+    out = {
+        "embed": ("vocab", "embed"),
+        "layers": layers,
+        "ln_f": ("embed_noshard",),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ("embed", "vocab")
+    return out
+
+
+def _sc(x, cfg: "TransformerConfig", *axes):
+    """with_sharding_constraint by logical position: 'b' -> batch axes,
+    'm' -> model axis, None -> unsharded. No-op when constraints are off."""
+    if cfg.act_batch_axes is None and cfg.act_model_axis is None:
+        return x
+    spec = []
+    for a in axes:
+        if a == "b":
+            spec.append(cfg.act_batch_axes if cfg.act_batch_axes and
+                        len(cfg.act_batch_axes) > 1
+                        else (cfg.act_batch_axes[0] if cfg.act_batch_axes
+                              else None))
+        elif a == "m":
+            spec.append(cfg.act_model_axis)
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.PartitionSpec(*spec))
+
+
+
+def _res_axes(cfg):
+    """Residual-stream constraint: seq over model when seq_parallel."""
+    return ("b", "m", None) if cfg.seq_parallel else ("b", None, None)
+
+
+def _attn_axes(cfg):
+    """('b', None, 'm', None) for head sharding, ('b', None, None, 'm')
+    for dh sharding (small-H archs)."""
+    if cfg.attn_shard == "dh":
+        return ("b", None, None, "m")
+    return ("b", None, "m", None)
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) absolute token positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+# ---------------------------------------------------------------------------
+# Attention (naive reference + blocked online-softmax)
+# ---------------------------------------------------------------------------
+
+def _mask_fn(cfg: TransformerConfig):
+    """(q_pos, k_pos) -> allowed (bool), broadcasting over arrays."""
+    def allowed(qp, kp):
+        m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+        if cfg.causal:
+            m &= kp <= qp
+        if cfg.window is not None:
+            m &= kp > qp - cfg.window
+        if cfg.attention_chunk is not None:
+            m &= (kp // cfg.attention_chunk) == (qp // cfg.attention_chunk)
+        return m
+    return allowed
+
+
+def expand_kv(k, n_heads):
+    """GQA kv (B,S,Hkv,Dh) -> flat (B,S,H,Dh). Keeping attention in flat-H
+    layout lets the 'heads' sharding survive (the grouped (Hkv, G) reshape
+    breaks GSPMD head propagation — measured 16x activation replication)."""
+    g = n_heads // k.shape[2]
+    return jnp.repeat(k, g, axis=2) if g > 1 else k
+
+
+def attention_naive(q, k, v, q_pos, k_pos, cfg, k_valid=None):
+    """q, k, v: (B,S,H,Dh) (kv pre-expanded). Returns (B,Sq,H,Dh)."""
+    b, sq, h, dh = q.shape
+    logits = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32)
+    logits *= 1.0 / np.sqrt(dh)
+    mask = _mask_fn(cfg)(q_pos[:, None, :, None], k_pos[:, None, None, :])
+    if k_valid is not None:
+        mask &= k_valid[:, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", p, v)
+
+
+def attention_blocked(q, k, v, q_pos, k_pos, cfg, k_valid=None):
+    """Online-softmax attention: scan over KV blocks, never materialising
+    the (Sq, Sk) score matrix. Same tiling as the Pallas kernel.
+    q, k, v: (B,S,H,Dh) flat-H (kv pre-expanded)."""
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    bk = min(cfg.block_kv, sk)
+    n_blocks = (sk + bk - 1) // bk
+    pad = n_blocks * bk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        kv_ok = jnp.pad(jnp.ones((b, sk), bool) if k_valid is None else k_valid,
+                        ((0, 0), (0, pad)))
+    else:
+        kv_ok = jnp.ones((b, sk), bool) if k_valid is None else k_valid
+
+    qh = (q * (1.0 / np.sqrt(dh))).astype(q.dtype)
+    kb = k.reshape(b, n_blocks, bk, h, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, n_blocks, bk, h, dh).transpose(1, 0, 2, 3, 4)
+    pb = k_pos.reshape(b, n_blocks, bk).transpose(1, 0, 2)
+    ob = kv_ok.reshape(b, n_blocks, bk).transpose(1, 0, 2)
+    allowed = _mask_fn(cfg)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk, okblk = blk
+        s = jnp.einsum("bqhd,bshd->bhqs", qh, kblk).astype(jnp.float32)
+        mask = allowed(q_pos[:, None, :, None], pblk[:, None, None, :])
+        mask &= okblk[:, None, None, :]
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", p.astype(q.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dh), jnp.float32)
+    (m, l, acc), _ = lax.scan(step, (m0, l0, a0), (kb, vb, pb, ob))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def attention(q, k, v, q_pos, k_pos, cfg, k_valid=None):
+    if cfg.use_flash_kernel and k_valid is None and cfg.attention_chunk is None:
+        from repro.kernels.flash_attention import ops as flash_ops
+        return flash_ops.flash_attention(
+            q, k, v, q_pos, k_pos, causal=cfg.causal, window=cfg.window)
+    if q.shape[1] >= cfg.block_q or k.shape[1] > 4 * cfg.block_kv:
+        f = attention_blocked
+        if cfg.remat == "full":
+            f = jax.checkpoint(f, static_argnums=(5,))
+        return f(q, k, v, q_pos, k_pos, cfg, k_valid)
+    return attention_naive(q, k, v, q_pos, k_pos, cfg, k_valid)
+
+
+# ---------------------------------------------------------------------------
+# FFN: dense GLU / MoE
+# ---------------------------------------------------------------------------
+
+def _act(x, kind):
+    if kind == "swiglu" or kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "geglu" or kind == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def dense_ffn(x, wi, wo, cfg):
+    glu = cfg.activation in ("swiglu", "geglu")
+    h = _sc(x @ wi, cfg, "b", None, "m")
+    if glu:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = _act(gate, cfg.activation) * up
+    else:
+        h = _act(h, cfg.activation)
+    return _sc(h @ wo, cfg, "b", None, None)
+
+
+def moe_ffn(x, router_w, wi, wo, cfg):
+    """x: (B, T, D). Group = batch row; top-k routing with capacity drop.
+
+    GShard-style one-hot einsum dispatch/combine: scatter/gather dispatch
+    lowers to batched u32 index tensors that GSPMD replicates to global
+    batch (measured 48-60 GiB/device at mixtral scale); one-hot matmuls
+    partition like every other dot. The (T, E*C) dispatch tensor is the
+    known GShard overhead — sort-based dispatch on TPU is a §Perf lever.
+
+    Returns (B, T, D) plus the Switch load-balancing auxiliary loss.
+    """
+    b, t, d = x.shape
+    e, k = cfg.moe.num_experts, cfg.moe.top_k
+    cap = max(1, int(t * k * cfg.moe.capacity_factor / e))
+
+    logits = (x @ router_w).astype(jnp.float32)            # (B,T,E)
+    probs = jax.nn.softmax(logits, -1)
+    topw, topi = lax.top_k(probs, k)                       # (B,T,k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # queue slot per assignment, k-major priority (k=0 fills first)
+    oh = jax.nn.one_hot(topi, e, dtype=jnp.int32)          # (B,T,k,E)
+    ohk = oh.transpose(0, 2, 1, 3)                         # (B,k,T,E)
+    pos = jnp.cumsum(ohk.reshape(b, k * t, e), axis=1) - 1
+    slot = (pos * ohk.reshape(b, k * t, e)).sum(-1)        # (B,k*t)
+    keep = (slot < cap).reshape(b, k, t)
+    slot = slot.reshape(b, k, t)
+
+    glu = cfg.activation in ("swiglu", "geglu")
+    xb = jnp.zeros((b, e, cap, d), x.dtype)
+    disp = []
+    for kk in range(k):
+        slot_oh = jax.nn.one_hot(slot[:, kk], cap, dtype=x.dtype)  # (B,T,C)
+        dk = (ohk[:, kk].astype(x.dtype)[..., None]
+              * slot_oh[:, :, None, :]
+              * keep[:, kk, :, None, None].astype(x.dtype))        # (B,T,E,C)
+        disp.append(dk)
+        xb = xb + jnp.einsum("btec,btd->becd", dk, x)
+    xb = _sc(xb, cfg, "b", None, None, None)
+
+    h = _sc(jnp.einsum("becd,edf->becf", xb, wi), cfg, "b", None, None, "m")
+    if glu:
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = _act(gate, cfg.activation) * up
+    else:
+        h = _act(h, cfg.activation)
+    yb = _sc(jnp.einsum("becf,efd->becd", h, wo),
+             cfg, "b", None, None, None)                   # (B,E,C,D)
+
+    y = jnp.zeros_like(x)
+    for kk in range(k):
+        wk = topw[:, :, kk].astype(x.dtype)[:, :, None, None]
+        y = y + jnp.einsum("btec,becd->btd", disp[kk] * wk, yb)
+
+    # Switch aux loss: E * sum_e f_e * P_e
+    me = probs.mean(axis=(0, 1))
+    fe = (oh.sum((1, 2)).astype(jnp.float32) / jnp.float32(t * k)).mean(0)
+    aux = e * jnp.sum(fe * me)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Blocks / full model
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale
+
+
+def _layer(x, lp, cfg, q_pos, k_pos, k_valid=None):
+    """One transformer block (training/prefill path). Returns (x, aux)."""
+    b, s, _ = x.shape
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = cfg.dtype
+
+    hx = rmsnorm(x, lp["ln1"].astype(dt), cfg.norm_eps)
+    q = _sc((hx @ lp["wq"].astype(dt)).reshape(b, s, h, dh),
+            cfg, *_attn_axes(cfg))
+    kk = (hx @ lp["wk"].astype(dt)).reshape(b, s, hkv, dh)
+    vv = (hx @ lp["wv"].astype(dt)).reshape(b, s, hkv, dh)
+    q = rope(q, q_pos, cfg.rope_theta)
+    kk = rope(kk, q_pos, cfg.rope_theta)
+    kk = _sc(expand_kv(kk, h), cfg, *_attn_axes(cfg))
+    vv = _sc(expand_kv(vv, h), cfg, *_attn_axes(cfg))
+    att = attention(q, kk, vv, q_pos, k_pos, cfg, k_valid)
+    att = _sc(att, cfg, *_attn_axes(cfg))
+    x = x + (att.reshape(b, s, h * dh) @ lp["wo"].astype(dt))
+    x = _sc(x, cfg, *_res_axes(cfg))
+
+    hx = rmsnorm(x, lp["ln2"].astype(dt), cfg.norm_eps)
+    if cfg.moe is None:
+        y = dense_ffn(hx, lp["wi"].astype(dt), lp["wo_ff"].astype(dt), cfg)
+        aux = jnp.float32(0.0)
+    else:
+        y, aux = moe_ffn(hx, lp["router"].astype(dt), lp["wi"].astype(dt),
+                         lp["wo_ff"].astype(dt), cfg)
+    return _sc(x + y, cfg, *_res_axes(cfg)), aux
+
+
+def transformer_forward(params, tokens, cfg: TransformerConfig, *,
+                        positions=None, k_valid=None, return_hidden=False):
+    """tokens (B, S) -> logits (B, S, V) [or hidden (B, S, D)]."""
+    b, s = tokens.shape
+    dt = cfg.dtype
+    x = _sc(params["embed"].astype(dt)[tokens], cfg, *_res_axes(cfg))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        x = carry
+        x, aux = _layer(x, lp, cfg, positions, positions, k_valid)
+        return x, aux
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = lax.scan(body_fn, x, params["layers"])
+    x = rmsnorm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    if return_hidden:
+        return x, auxs.sum()
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    return _sc(x @ head, cfg, "b", None, "m"), auxs.sum()
+
+
+def encode(params, tokens, cfg: TransformerConfig, valid=None):
+    """Mean-pooled L2-normalised sentence embedding (retrieval encoder)."""
+    hidden, _ = transformer_forward(params, tokens, cfg, k_valid=valid,
+                                    return_hidden=True)
+    if valid is None:
+        pooled = hidden.mean(1)
+    else:
+        w = valid[..., None].astype(hidden.dtype)
+        pooled = (hidden * w).sum(1) / jnp.maximum(w.sum(1), 1.0)
+    pooled = pooled.astype(jnp.float32)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+def lm_loss(params, tokens, cfg: TransformerConfig, aux_weight=0.01):
+    """Next-token cross-entropy; optional blocked (chunked-vocab) logsumexp."""
+    logits, aux = transformer_forward(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logits = logits.astype(jnp.float32)
+    if cfg.vocab_chunks > 1:
+        v = logits.shape[-1]
+        csz = -(-v // cfg.vocab_chunks)
+        padv = cfg.vocab_chunks * csz - v
+        lp = jnp.pad(logits, ((0, 0), (0, 0), (0, padv)), constant_values=-1e30)
+        chunks = lp.reshape(*lp.shape[:2], cfg.vocab_chunks, csz)
+        lse = jax.nn.logsumexp(jax.nn.logsumexp(chunks, -1), -1)
+    else:
+        lse = jax.nn.logsumexp(logits, -1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+    nll = (lse - tgt_logit).mean()
+    return nll + aux_weight * aux
+
+
+def prefill(params, tokens, cfg: TransformerConfig):
+    """Prefill pass for serving: tokens (B, S) -> (last-token logits (B, V),
+    cache {k, v: (L, B, S_cache, Hkv, Dh), pos}). Windowed archs emit only
+    the rolling tail of the KV stream (cache_length)."""
+    b, s = tokens.shape
+    dt = cfg.dtype
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    s_cache = cache_length(cfg, s)
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, lp):
+        x = carry
+        hx = rmsnorm(x, lp["ln1"].astype(dt), cfg.norm_eps)
+        q = _sc((hx @ lp["wq"].astype(dt)).reshape(b, s, h, dh),
+                cfg, *_attn_axes(cfg))
+        kk = (hx @ lp["wk"].astype(dt)).reshape(b, s, hkv, dh)
+        vv = (hx @ lp["wv"].astype(dt)).reshape(b, s, hkv, dh)
+        q = rope(q, positions, cfg.rope_theta)
+        kk = rope(kk, positions, cfg.rope_theta)
+        ke = _sc(expand_kv(kk, h), cfg, *_attn_axes(cfg))
+        ve = _sc(expand_kv(vv, h), cfg, *_attn_axes(cfg))
+        att = _sc(attention(q, ke, ve, positions, positions, cfg),
+                  cfg, *_attn_axes(cfg))
+        x = x + (att.reshape(b, s, h * dh) @ lp["wo"].astype(dt))
+        x = _sc(x, cfg, "b", None, None)
+        hx = rmsnorm(x, lp["ln2"].astype(dt), cfg.norm_eps)
+        if cfg.moe is None:
+            y = dense_ffn(hx, lp["wi"].astype(dt), lp["wo_ff"].astype(dt), cfg)
+        else:
+            y, _ = moe_ffn(hx, lp["router"].astype(dt), lp["wi"].astype(dt),
+                           lp["wo_ff"].astype(dt), cfg)
+        # rolling tail goes to the cache; roll so slot = pos % s_cache
+        ktail = jnp.roll(kk[:, -s_cache:], s % s_cache, axis=1)
+        vtail = jnp.roll(vv[:, -s_cache:], s % s_cache, axis=1)
+        return _sc(x + y, cfg, *_res_axes(cfg)), (ktail, vtail)
+
+    x, (ks, vs) = lax.scan(body, x, params["layers"])
+    x = rmsnorm(x[:, -1], params["ln_f"].astype(dt), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    logits = x @ head
+    cache = {"k": ks, "v": vs,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+
+def cache_length(cfg: TransformerConfig, max_seq: int) -> int:
+    """Windowed/chunked archs keep a rolling buffer — this is what makes the
+    524k-context decode cells sub-quadratic (DESIGN.md §5)."""
+    if cfg.window is not None:
+        return min(max_seq, cfg.window)
+    if cfg.attention_chunk is not None:
+        return min(max_seq, cfg.attention_chunk)
+    return max_seq
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int,
+                  dtype=None):
+    s = cache_length(cfg, max_seq)
+    dt = dtype or cfg.dtype
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+        "pos": jnp.zeros((batch,), jnp.int32),   # next absolute position
+    }
+
+
+def decode_step(params, cache, tokens, cfg: TransformerConfig):
+    """One-token decode: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    b = tokens.shape[0]
+    s_cache = cache["k"].shape[2]
+    dt = cfg.dtype
+    pos = cache["pos"]                               # (B,)
+    q_pos = pos[:, None]                             # (B,1)
+    slot = pos % s_cache                             # rolling buffer slot
+
+    x = params["embed"].astype(dt)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+
+    # absolute position of each rolling-buffer slot after this step's write:
+    # largest a ≡ slot (mod S) with a <= pos  ->  a = pos - ((pos - slot) mod S)
+    slots = jnp.arange(s_cache, dtype=jnp.int32)[None]            # (1,S)
+    k_pos = pos[:, None] - jnp.mod(pos[:, None] - slots, s_cache)
+    k_valid = k_pos >= 0
+
+    def body(x, lp_cache):
+        lp, ck, cv = lp_cache
+        hx = rmsnorm(x, lp["ln1"].astype(dt), cfg.norm_eps)
+        q = (hx @ lp["wq"].astype(dt)).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        kk = (hx @ lp["wk"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        vv = (hx @ lp["wv"].astype(dt)).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = rope(q, q_pos, cfg.rope_theta)
+        kk = rope(kk, q_pos, cfg.rope_theta)
+        ck = ck.at[jnp.arange(b), slot].set(kk[:, 0])
+        cv = cv.at[jnp.arange(b), slot].set(vv[:, 0])
+        ke = _sc(expand_kv(ck, cfg.n_heads), cfg, *_attn_axes(cfg))
+        ve = _sc(expand_kv(cv, cfg.n_heads), cfg, *_attn_axes(cfg))
+        att = attention_naive(q, ke, ve, q_pos, k_pos, cfg, k_valid)
+        x = x + att.reshape(b, 1, -1) @ lp["wo"].astype(dt)
+        hx = rmsnorm(x, lp["ln2"].astype(dt), cfg.norm_eps)
+        if cfg.moe is None:
+            y = dense_ffn(hx, lp["wi"].astype(dt), lp["wo_ff"].astype(dt), cfg)
+        else:
+            y, _ = moe_ffn(hx, lp["router"].astype(dt), lp["wi"].astype(dt),
+                           lp["wo_ff"].astype(dt), cfg)
+        return x + y, (ck, cv)
+
+    x, (new_k, new_v) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rmsnorm(x, params["ln_f"].astype(dt), cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"]).astype(dt)
+    logits = x @ head
+    new_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def count_params(cfg: TransformerConfig) -> int:
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    glu = cfg.activation in ("swiglu", "geglu")
+    attn = D * h * dh + 2 * D * hkv * dh + h * dh * D
+    if cfg.moe is None:
+        ffn = D * F * (3 if glu else 2)
+    else:
+        ffn = cfg.moe.num_experts * D * F * (3 if glu else 2) + D * cfg.moe.num_experts
+    total = L * (attn + ffn + 2 * D) + V * D + D
+    if not cfg.tie_embeddings:
+        total += D * V
+    return total
+
+
+def active_params(cfg: TransformerConfig) -> int:
+    """Params touched per token (MoE: top-k experts only) — the N in the
+    MODEL_FLOPS = 6*N*D roofline term."""
+    dh, h, hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    L, D, F, V = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    glu = cfg.activation in ("swiglu", "geglu")
+    attn = D * h * dh + 2 * D * hkv * dh + h * dh * D
+    k = cfg.moe.top_k if cfg.moe else 1
+    ffn = k * D * F * (3 if glu else 2)
+    total = L * (attn + ffn) + V * D
+    if not cfg.tie_embeddings:
+        total += D * V
+    return total

@@ -1,0 +1,15 @@
+"""Retrieval substrate — the paper's Fig. 5 semantic-search pipeline:
+embedding model -> vector index (IVF-Flat like pgvector's ivfflat, or
+sign-LSH) -> ANN top-k -> precision@k / query-density evaluation.
+"""
+from repro.retrieval.encoder import (EncoderConfig, init_encoder,
+                                     contrastive_loss, embed_tokens)
+from repro.retrieval.exact import exact_topk
+from repro.retrieval.ivfflat import IVFFlatIndex, build_ivfflat, search_ivfflat
+from repro.retrieval.lsh import LSHIndex, build_lsh, search_lsh
+from repro.retrieval.metrics import precision_at_k
+
+__all__ = ["EncoderConfig", "init_encoder", "contrastive_loss",
+           "embed_tokens", "exact_topk", "IVFFlatIndex", "build_ivfflat",
+           "search_ivfflat", "LSHIndex", "build_lsh", "search_lsh",
+           "precision_at_k"]

@@ -1,0 +1,87 @@
+"""Embedding model of the semantic-search pipeline (paper Fig. 5).
+
+The paper uses a fine-tuned MPNet; offline we train our own bidirectional
+transformer encoder (models/transformer with causal=False) with an in-batch
+InfoNCE contrastive loss on (query, passage) pairs — the standard
+dense-retrieval recipe. The encoder IS the indexing cost the paper wants to
+avoid re-running on the full corpus, so it is first-class and sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (TransformerConfig, encode,
+                                      init_transformer)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab_size: int = 4096
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    dtype: Any = jnp.float32
+
+    def transformer(self) -> TransformerConfig:
+        return TransformerConfig(
+            vocab_size=self.vocab_size, d_model=self.d_model,
+            n_layers=self.n_layers, n_heads=self.n_heads,
+            n_kv_heads=self.n_heads, d_ff=self.d_ff, causal=False,
+            tie_embeddings=True, activation="geglu", dtype=self.dtype)
+
+
+def init_encoder(key, cfg: EncoderConfig):
+    return init_transformer(key, cfg.transformer())
+
+
+def embed_tokens(params, tokens, cfg: EncoderConfig):
+    """tokens (B, S) -> L2-normalised embeddings (B, D)."""
+    return encode(params, tokens, cfg.transformer())
+
+
+def contrastive_loss(params, batch, cfg: EncoderConfig,
+                     temperature: float = 0.05):
+    """InfoNCE with in-batch negatives + optional mined same-community hard
+    negatives (``negative_tokens``) — the margin Table I actually measures
+    is relevant-vs-community-distractor, which in-batch (cross-community)
+    negatives alone never train."""
+    q = embed_tokens(params, batch["query_tokens"], cfg)     # (B, D)
+    p = embed_tokens(params, batch["passage_tokens"], cfg)   # (B, D)
+    logits = (q @ p.T) / temperature                          # (B, B)
+    if "negative_tokens" in batch:
+        n = embed_tokens(params, batch["negative_tokens"], cfg)
+        hard = jnp.sum(q * n, axis=-1, keepdims=True) / temperature
+        logits_q = jnp.concatenate([logits, hard], axis=1)    # (B, B+1)
+    else:
+        logits_q = logits
+    labels = jnp.arange(q.shape[0])
+    logq = jax.nn.log_softmax(logits_q, axis=-1)
+    logp = jax.nn.log_softmax(logits, axis=0)
+    nll = -(jnp.take_along_axis(logq, labels[:, None], 1).mean()
+            + jnp.take_along_axis(logp, labels[None, :].T, 1).mean()) / 2
+    return nll
+
+
+def embed_corpus(params, tokens: np.ndarray, cfg: EncoderConfig,
+                 batch_size: int = 256) -> np.ndarray:
+    """Host-side batched embedding of a full corpus (the offline indexing
+    stage of Fig. 5)."""
+    fn = jax.jit(lambda t: embed_tokens(params, t, cfg))
+    out = []
+    n = tokens.shape[0]
+    for i in range(0, n, batch_size):
+        blk = tokens[i:i + batch_size]
+        if blk.shape[0] < batch_size:  # pad to avoid recompilation
+            pad = batch_size - blk.shape[0]
+            blk = np.concatenate([blk, np.zeros((pad,) + blk.shape[1:],
+                                                blk.dtype)])
+            out.append(np.asarray(fn(jnp.asarray(blk)))[:-pad])
+        else:
+            out.append(np.asarray(fn(jnp.asarray(blk))))
+    return np.concatenate(out, axis=0)

@@ -1,0 +1,44 @@
+"""IR evaluation metrics: precision@k over a QRel set (paper Table I) —
+'the relevance percentage of entities responding to each query'."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def precision_at_k(retrieved_ids: np.ndarray, query_ids: np.ndarray,
+                   qrel_pairs: set, k: int = 3) -> float:
+    """retrieved_ids (Q, >=k) entity ids per query; qrel_pairs a set of
+    (query_id, entity_id) judged-relevant pairs. Mean p@k over queries."""
+    hits = 0
+    total = 0
+    for qi, row in zip(query_ids, retrieved_ids[:, :k]):
+        for e in row:
+            if e >= 0:
+                hits += int((int(qi), int(e)) in qrel_pairs)
+                total += 1
+    return hits / max(total, 1)
+
+
+def recall_at_k(retrieved_ids: np.ndarray, query_ids: np.ndarray,
+                qrel_by_query: dict, k: int = 10) -> float:
+    rec = []
+    for qi, row in zip(query_ids, retrieved_ids[:, :k]):
+        rel = qrel_by_query.get(int(qi), set())
+        if rel:
+            rec.append(len(rel & set(int(e) for e in row)) / len(rel))
+    return float(np.mean(rec)) if rec else 0.0
+
+
+def qrel_set(query_ids, entity_ids, valid) -> set:
+    q = np.asarray(query_ids)[np.asarray(valid)]
+    e = np.asarray(entity_ids)[np.asarray(valid)]
+    return set(zip(q.tolist(), e.tolist()))
+
+
+def qrel_dict(query_ids, entity_ids, valid) -> dict:
+    out: dict = {}
+    q = np.asarray(query_ids)[np.asarray(valid)]
+    e = np.asarray(entity_ids)[np.asarray(valid)]
+    for qi, ei in zip(q.tolist(), e.tolist()):
+        out.setdefault(qi, set()).add(ei)
+    return out

@@ -1,0 +1,104 @@
+"""Batched serving engine with continuous batching over a shared KV cache.
+
+The paper's Fig. 5 online component (query -> embed -> ANN) plus a
+generative RAG path: requests join a fixed-slot batch; finished slots are
+refilled without stalling in-flight requests (continuous batching). Slot
+state lives in the rolling KV cache; prefill for a joining request runs
+token-by-token through decode_step (simple, correct; chunked prefill is a
+§Perf extension).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import (TransformerConfig, decode_step,
+                                      init_kv_cache)
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 512
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 -> greedy
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray            # i32[prompt_len]
+    out: list = dataclasses.field(default_factory=list)
+    remaining_prompt: int = 0
+    new_tokens: int = 0
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, model_cfg: TransformerConfig,
+                 cfg: ServeConfig):
+        self.params = params
+        self.mcfg = model_cfg
+        self.cfg = cfg
+        self.cache = init_kv_cache(model_cfg, cfg.max_batch, cfg.max_seq)
+        self.slots: List[Optional[Request]] = [None] * cfg.max_batch
+        self._step = jax.jit(
+            lambda p, c, t: decode_step(p, c, t, model_cfg))
+
+    def submit(self, prompt: np.ndarray) -> Optional[Request]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                req = Request(prompt=prompt, remaining_prompt=len(prompt))
+                self.slots[i] = req
+                # joining slot restarts its cache position
+                self.cache["pos"] = self.cache["pos"].at[i].set(0)
+                return req
+        return None
+
+    def _next_tokens(self) -> np.ndarray:
+        toks = np.zeros((self.cfg.max_batch, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None or req.done:
+                continue
+            if req.remaining_prompt > 0:
+                toks[i, 0] = req.prompt[len(req.prompt) - req.remaining_prompt]
+            elif req.out:
+                toks[i, 0] = req.out[-1]
+        return toks
+
+    def step(self, key: Optional[jax.Array] = None) -> int:
+        """One engine step: feeds every active slot one token. Returns the
+        number of active requests."""
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and not r.done]
+        if not active:
+            return 0
+        toks = jnp.asarray(self._next_tokens())
+        logits, self.cache = self._step(self.params, self.cache, toks)
+        if self.cfg.temperature > 0 and key is not None:
+            nxt = jax.random.categorical(
+                key, logits[:, 0] / self.cfg.temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits[:, 0], axis=-1)
+        nxt = np.asarray(nxt)
+        for i in active:
+            req = self.slots[i]
+            if req.remaining_prompt > 0:
+                req.remaining_prompt -= 1
+                if req.remaining_prompt == 0 and req.new_tokens == 0:
+                    req.out.append(int(nxt[i]))   # first generated token
+                    req.new_tokens = 1
+            else:
+                req.out.append(int(nxt[i]))
+                req.new_tokens += 1
+            if req.new_tokens >= self.cfg.max_new_tokens:
+                req.done = True
+                self.slots[i] = None if req.done else req
+        return len(active)
+
+    def drain(self, key: Optional[jax.Array] = None):
+        while self.step(key):
+            pass

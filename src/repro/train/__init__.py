@@ -1,0 +1,11 @@
+"""Training substrate: optimizers (from scratch), sharded checkpointing with
+async writes + atomic rename, elastic re-mesh resume, straggler policy."""
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   AdafactorConfig, adafactor_init,
+                                   adafactor_update)
+from repro.train.checkpoint import (save_checkpoint, restore_checkpoint,
+                                    latest_step, AsyncCheckpointer)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "AdafactorConfig",
+           "adafactor_init", "adafactor_update", "save_checkpoint",
+           "restore_checkpoint", "latest_step", "AsyncCheckpointer"]

@@ -1,0 +1,148 @@
+"""Fault-tolerant checkpointing without orbax: per-leaf npz shards + a JSON
+manifest, written to a temp dir and atomically renamed (a crashed writer can
+never corrupt the latest checkpoint). AsyncCheckpointer runs saves on a
+background thread so the train loop never blocks on disk.
+
+Restore is mesh-agnostic: leaves are stored unsharded (gathered); the
+restoring launcher re-applies whatever NamedSharding the *current* mesh
+prescribes — this is what makes elastic re-mesh resume (train/elastic.py)
+a pure metadata operation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    """Blocking save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    paths, leaves, _ = _flatten_with_paths(tree)
+    arrays = {}
+    for i, (p, leaf) in enumerate(zip(paths, leaves)):
+        arrays[f"leaf_{i}"] = np.asarray(jax.device_get(leaf))
+    np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+    manifest = {"step": step,
+                "paths": paths,
+                "dtypes": [str(a.dtype) for a in arrays.values()],
+                "shapes": [list(a.shape) for a in arrays.values()]}
+    with open(os.path.join(tmp, _MANIFEST), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``like``; optionally re-shard each leaf
+    with a matching pytree (or flat list) of NamedShardings."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "leaves.npz"))
+    paths, leaves, treedef = _flatten_with_paths(like)
+    if paths != manifest["paths"]:
+        raise ValueError(
+            "checkpoint structure mismatch:\n saved=%s\n want=%s" %
+            (manifest["paths"][:5], paths[:5]))
+    shard_list = (jax.tree.leaves(shardings,
+                                  is_leaf=lambda s: isinstance(s, jax.sharding.Sharding))
+                  if shardings is not None else [None] * len(leaves))
+    out = []
+    for i, (leaf, sh) in enumerate(zip(leaves, shard_list)):
+        arr = data[f"leaf_{i}"]
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer with bounded queue (depth 1:
+    a newer pending save supersedes an older one, like orbax's behaviour)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._q: queue.Queue = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save_checkpoint(self.directory, step, host_tree)
+                self._gc()
+            except BaseException as e:  # surfaced on next save()/close()
+                self._err = e
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := re.fullmatch(r"step_(\d+)", d)))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory,
+                                       f"step_{s:010d}"), ignore_errors=True)
+
+    def save(self, step: int, tree: Any):
+        if self._err:
+            raise self._err
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        try:
+            self._q.put_nowait((step, host_tree))
+        except queue.Full:
+            # drop the superseded pending save, enqueue the newer one
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._q.put_nowait((step, host_tree))
+
+    def close(self):
+        self._q.put(None)
+        self._t.join()
+        if self._err:
+            raise self._err

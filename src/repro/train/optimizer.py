@@ -1,0 +1,149 @@
+"""Optimizers from scratch (no optax offline): AdamW and Adafactor.
+
+AdamW keeps fp32 m/v with the same sharding as the parameters (the launcher
+shards both over the mesh, ZeRO-style — see distributed/sharding.py), plus
+linear-warmup cosine decay. Adafactor factors the second moment of matrices
+into row/col statistics — 1/r the optimizer memory, the standard choice for
+the biggest MoE archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def _schedule(step, cfg):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    lr = _schedule(step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * g32
+        v_new = b2 * v + (1 - b2) * g32 * g32
+        mhat = m_new / (1 - b1 ** step)
+        vhat = v_new / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gn, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 1e-2
+    decay: float = 0.8
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    return {"slots": jax.tree.map(init, params,
+                                  is_leaf=lambda x: isinstance(x, jnp.ndarray)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(grads, state, params, cfg: AdafactorConfig):
+    step = state["step"] + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-cfg.decay)
+    sched = AdamWConfig(lr=cfg.lr, warmup_steps=cfg.warmup_steps,
+                        total_steps=cfg.total_steps,
+                        min_lr_ratio=cfg.min_lr_ratio)
+    lr = _schedule(step, sched)
+
+    def upd(g, slot, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + cfg.eps1
+        if _factored(p.shape):
+            vr = beta * slot["vr"] + (1 - beta) * g2.mean(-1)
+            vc = beta * slot["vc"] + (1 - beta) * g2.mean(-2)
+            denom = (vr / jnp.maximum(vr.mean(-1, keepdims=True), cfg.eps1))[..., None] * vc[..., None, :]
+            u = g32 / jnp.sqrt(denom + cfg.eps1)
+            new_slot = {"vr": vr, "vc": vc}
+        else:
+            v = beta * slot["v"] + (1 - beta) * g2
+            u = g32 / jnp.sqrt(v + cfg.eps1)
+            new_slot = {"v": v}
+        rms_u = jnp.sqrt(jnp.mean(u * u) + cfg.eps1)
+        u = u / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        scale = jnp.maximum(jnp.sqrt(jnp.mean(p.astype(jnp.float32) ** 2)), cfg.eps2)
+        new_p = (p.astype(jnp.float32) - lr * scale * u
+                 - lr * cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_slot
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, {"slots": new_s, "step": step}, {"lr": lr}

@@ -1,0 +1,95 @@
+"""End-to-end behaviour tests for the WindTunnel system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QRelTable, WindTunnelConfig, run_windtunnel,
+                        run_uniform_baseline, query_density)
+from repro.data.synthetic import generate_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return generate_corpus(num_queries=256, qrels_per_query=8, num_topics=16,
+                           aux_fraction=0.3, seed=0, vocab_size=512)
+
+
+@pytest.fixture(scope="module")
+def wt_result(corpus):
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    cfg = WindTunnelConfig(tau_quantile=0.5, fanout=8, lp_rounds=4,
+                           target_size=0.3 * corpus.num_primary, seed=0)
+    fn = jax.jit(lambda q: run_windtunnel(
+        q, num_queries=corpus.num_queries,
+        num_entities=corpus.num_entities, config=cfg))
+    return fn(qrels), corpus
+
+
+def test_pipeline_produces_sample(wt_result):
+    res, corpus = wt_result
+    size = int(res.sample.entity_mask.sum())
+    assert 0 < size < corpus.num_entities
+    # sample only contains qrel'd (primary) entities — aux have no edges
+    kept = np.nonzero(np.asarray(res.sample.entity_mask))[0]
+    assert kept.max() < corpus.num_primary
+
+
+def test_sample_size_calibration(wt_result):
+    res, corpus = wt_result
+    target = 0.3 * corpus.num_primary
+    size = int(res.sample.entity_mask.sum())
+    assert abs(size - target) / target < 0.5   # stochastic but calibrated
+
+
+def test_communities_are_topic_pure(wt_result):
+    """Label-propagation communities should align with planted topics."""
+    res, corpus = wt_result
+    labels = np.asarray(res.labels)[:corpus.num_primary]
+    topics = corpus.entity_topic[:corpus.num_primary]
+    from collections import Counter
+    pure = 0
+    for lab in np.unique(labels):
+        members = topics[labels == lab]
+        pure += Counter(members).most_common(1)[0][1]
+    assert pure / labels.size > 0.95
+
+
+def test_cluster_sampling_keeps_whole_communities(wt_result):
+    res, corpus = wt_result
+    labels = np.asarray(res.labels)
+    mask = np.asarray(res.sample.entity_mask)
+    kept_labels = np.unique(labels[mask])
+    for lab in kept_labels[:50]:
+        members = labels == lab
+        assert mask[members].all(), "cluster sampling must keep whole communities"
+
+
+def test_windtunnel_density_beats_uniform(wt_result):
+    res, corpus = wt_result
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    size = int(res.sample.entity_mask.sum())
+    uni = run_uniform_baseline(qrels, num_queries=corpus.num_queries,
+                               num_entities=corpus.num_entities,
+                               rate=size / corpus.num_entities, seed=3)
+    rho_wt = float(query_density(qrels, res.sample.entity_mask,
+                                 res.reconstructed.query_mask,
+                                 num_queries=corpus.num_queries,
+                                 num_entities=corpus.num_entities))
+    rho_uni = float(query_density(qrels, uni.entity_mask, uni.query_mask,
+                                  num_queries=corpus.num_queries,
+                                  num_entities=corpus.num_entities))
+    assert rho_wt > rho_uni, (rho_wt, rho_uni)   # Table II direction
+
+
+def test_reconstruction_schema(wt_result):
+    res, corpus = wt_result
+    rec = res.reconstructed
+    # output rows are a subset of input rows with the same schema
+    assert rec.qrels.query_ids.shape == corpus.qrels.query_ids.shape
+    v_in = np.asarray(corpus.qrels.valid)
+    v_out = np.asarray(rec.qrels.valid)
+    assert (v_out <= v_in).all()
+    # every surviving row's entity is in the sample
+    e = np.asarray(corpus.qrels.entity_ids)[v_out]
+    assert np.asarray(res.sample.entity_mask)[e].all()
