@@ -4,6 +4,7 @@ CSV rows (derived = the table's headline number).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig4,table1
+  PYTHONPATH=src python -m benchmarks.run --only kernels --json results/bench
 """
 from __future__ import annotations
 
@@ -28,7 +29,7 @@ def row(name, us, derived):
 
 
 def _timeit(fn, n=3):
-    fn()  # compile/warmup
+    jax.block_until_ready(fn())  # compile/warmup, fully retired before t0
     t0 = time.time()
     for _ in range(n):
         out = fn()
@@ -124,7 +125,6 @@ def bench_kernels():
     from repro.kernels.topk_scoring.ops import topk_scores
     from repro.kernels.topk_scoring.ref import topk_scores_ref
     from repro.kernels.label_prop.ops import label_prop_round
-    from repro.core.label_prop import edges_to_ell, propagate, propagate_ell
     from repro.core.graph_builder import EdgeList, symmetrize
 
     key = jax.random.PRNGKey(0)
@@ -142,7 +142,9 @@ def bench_kernels():
     row("kernel_label_prop(pallas-interpret)",
         _timeit(lambda: label_prop_round(labels, nbr, wgt)), f"n={n} K={kdeg}")
 
-    # sort-engine vs ELL-engine full LP (the §Perf trade for Alg. 2)
+    # every registered LP engine, side-by-side on the same graph (the §Perf
+    # trade for Alg. 2: sort's O(E log E) shuffle vs ELL's dense O(N K^2))
+    from repro.core import engines as eng
     rng = np.random.default_rng(0)
     u = rng.integers(0, n, 4 * n).astype(np.int32)
     v = rng.integers(0, n, 4 * n).astype(np.int32)
@@ -150,12 +152,13 @@ def bench_kernels():
     edges = EdgeList(jnp.asarray(u), jnp.asarray(v), jnp.asarray(w),
                      jnp.asarray(u != v))
     src, dst, ww, val = symmetrize(edges)
-    f_sort = jax.jit(lambda: propagate(src, dst, ww, val, num_nodes=n,
-                                       rounds=3).labels)
-    nbr2, wgt2 = edges_to_ell(src, dst, ww, val, num_nodes=n, max_degree=32)
-    f_ell = jax.jit(lambda: propagate_ell(nbr2, wgt2, rounds=3).labels)
-    row("labelprop_sort_engine", _timeit(f_sort), f"E={4*n} rounds=3")
-    row("labelprop_ell_engine", _timeit(f_ell), f"E={4*n} rounds=3 K=32")
+    for name in eng.available_engines():
+        engine = eng.get_engine(name)
+        f = jax.jit(lambda engine=engine: eng.run_engine(
+            engine, src, dst, ww, val, num_nodes=n, max_degree=32,
+            rounds=3).labels)
+        row(f"labelprop_engine[{name}]", _timeit(f),
+            f"E={4*n} rounds=3 K=32")
 
 
 # ---------------------------------------------------------------------------
@@ -197,11 +200,23 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset of " + ",".join(BENCHES))
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="directory to persist each section's rows as "
+                        "BENCH_<name>.json (the perf trajectory record)")
     args = p.parse_args()
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:
+        start = len(ROWS)
         BENCHES[n]()
+        if args.json:
+            os.makedirs(args.json, exist_ok=True)
+            out = os.path.join(args.json, f"BENCH_{n}.json")
+            with open(out, "w") as f:
+                json.dump([{"name": r[0], "us_per_call": r[1],
+                            "derived": r[2]} for r in ROWS[start:]],
+                          f, indent=2)
+            print(f"# wrote {out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -2,22 +2,30 @@
 
 GraphBuilder (Alg. 1) -> GraphSampler (Alg. 2, weighted label propagation +
 cluster sampling) -> CorpusReconstructor, plus the Yule-Simon community-
-structure analysis of §III-A. See DESIGN.md for the MapReduce->JAX mapping.
+structure analysis of §III-A. See DESIGN.md for the MapReduce->JAX mapping,
+the label-prop engine registry (§4) and the sharded dataflow (§5).
 """
+from repro.core.engines import (LPEngine, available_engines, get_engine,
+                                register, run_engine)
 from repro.core.graph_builder import (EdgeList, QRelTable,
                                       build_affinity_graph, node_degrees,
                                       symmetrize)
-from repro.core.label_prop import propagate, propagate_ell, edges_to_ell
+from repro.core.label_prop import (ell_round, propagate, propagate_ell,
+                                   edges_to_ell, sort_round)
 from repro.core.pipeline import (WindTunnelConfig, WindTunnelResult,
                                  run_uniform_baseline, run_windtunnel)
 from repro.core.reconstructor import query_density, reconstruct
 from repro.core.sampler import cluster_sample, uniform_sample
+from repro.core.sharded_pipeline import run_windtunnel_sharded
 from repro.core.yule_simon import YuleSimonFit, fit_em
 
 __all__ = [
     "EdgeList", "QRelTable", "build_affinity_graph", "node_degrees",
     "symmetrize", "propagate", "propagate_ell", "edges_to_ell",
+    "sort_round", "ell_round",
+    "LPEngine", "available_engines", "get_engine", "register", "run_engine",
     "WindTunnelConfig", "WindTunnelResult", "run_windtunnel",
-    "run_uniform_baseline", "query_density", "reconstruct",
-    "cluster_sample", "uniform_sample", "YuleSimonFit", "fit_em",
+    "run_windtunnel_sharded", "run_uniform_baseline", "query_density",
+    "reconstruct", "cluster_sample", "uniform_sample", "YuleSimonFit",
+    "fit_em",
 ]

@@ -18,6 +18,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.label_prop import ell_round
+from repro.distributed.collectives import pvary_compat, unvary_compat
 
 
 def distributed_propagate_ell(mesh: Mesh, nbr: jnp.ndarray, wgt: jnp.ndarray,
@@ -51,10 +52,11 @@ def distributed_propagate_ell(mesh: Mesh, nbr: jnp.ndarray, wgt: jnp.ndarray,
             return new_labels, None
 
         labels0 = jnp.arange(n, dtype=jnp.int32)
-        # mark the replicated carry as device-varying (shard_map scan rule)
-        labels0 = lax.pvary(labels0, (axis,))
+        # mark the replicated carry as device-varying (shard_map scan rule;
+        # no-op on JAX versions without varying-manual-axes tracking)
+        labels0 = pvary_compat(labels0, (axis,))
         labels, _ = lax.scan(one, labels0, None, length=rounds)
-        return lax.pmax(labels, axis)   # collapse the varying annotation
+        return unvary_compat(labels, (axis,))  # collapse the annotation
 
     fn = shard_map(local_rounds, mesh=mesh,
                    in_specs=(P(axis, None), P(axis, None)),

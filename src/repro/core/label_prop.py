@@ -18,6 +18,10 @@ unspecified; a deterministic rule makes the pipeline reproducible.
 ``propagate_ell`` is the dense, degree-capped formulation that feeds the
 Pallas label_prop kernel (kernels/label_prop) — same semantics, different
 data layout (see ref.py there for the oracle correspondence).
+
+The per-round functions here (``sort_round``, ``ell_round``) are the
+building blocks the engine registry (engines.py, DESIGN.md §4) wraps into
+uniformly selectable execution strategies.
 """
 from __future__ import annotations
 
@@ -35,7 +39,9 @@ class LabelPropResult(NamedTuple):
     changes_per_round: jnp.ndarray  # i32[rounds] nodes that changed label
 
 
-def _one_round(labels, src, dst, w, valid, num_nodes):
+def sort_round(labels, src, dst, w, valid, num_nodes):
+    """One LP round over a directed edge list via sort + segment reduce —
+    the round the ``sort`` engine (engines.SortEngine) executes."""
     e = src.shape[0]
     lab_src = labels[jnp.where(valid, src, 0)]
     dst_k = jnp.where(valid, dst, num_nodes)           # sentinel sorts last
@@ -72,7 +78,7 @@ def propagate(src, dst, w, valid, *, num_nodes: int, rounds: int) -> LabelPropRe
     init = jnp.arange(num_nodes, dtype=jnp.int32)
 
     def step(labels, _):
-        new = _one_round(labels, src, dst, w, valid, num_nodes)
+        new = sort_round(labels, src, dst, w, valid, num_nodes)
         changed = jnp.sum((new != labels).astype(jnp.int32))
         return new, changed
 

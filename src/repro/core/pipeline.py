@@ -1,12 +1,16 @@
 """WindTunnel pipeline orchestration: GraphBuilder -> GraphSampler ->
 CorpusReconstructor (paper Fig. 3), as one jit-able program.
 
-Two GraphSampler execution paths with identical semantics:
-  * ``engine='sort'`` — sort/segment label propagation (reference, unbounded
-    degree; the direct MapReduce port).
-  * ``engine='ell'``  — degree-capped dense ELL label propagation; this is
-    the layout the Pallas TPU kernel consumes (kernels/label_prop) and the
-    path the perf work optimizes.
+The GraphSampler execution strategy is resolved through the engine registry
+(engines.py, DESIGN.md §4): ``WindTunnelConfig.engine`` names any registered
+``LPEngine`` — ``sort`` (sort/segment reference, unbounded degree), ``ell``
+(degree-capped dense ELL) or ``pallas`` (ELL layout with the per-round body
+in the Pallas TPU kernel, interpret mode off-TPU).  All engines share the
+same prepare → scan(round) → finalize driver, so the whole pipeline stays
+one XLA computation regardless of strategy.
+
+For the multi-device path see sharded_pipeline.run_windtunnel_sharded
+(DESIGN.md §5), which partitions this same dataflow across a mesh.
 """
 from __future__ import annotations
 
@@ -16,8 +20,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import engines as eng
 from repro.core import graph_builder as gb
-from repro.core import label_prop as lp
 from repro.core import reconstructor as rc
 from repro.core import sampler as sm
 
@@ -30,7 +34,7 @@ class WindTunnelConfig:
     lp_rounds: int = 5            # fixed LP round count (Alg. 2 termination)
     max_degree: int = 32          # ELL engine: per-node neighbour cap
     target_size: Optional[float] = None  # None -> paper's exact |L|/N rule
-    engine: str = "sort"          # 'sort' | 'ell'
+    engine: str = "sort"          # any name in engines.available_engines()
     seed: int = 0
 
 
@@ -54,15 +58,11 @@ def run_windtunnel(qrels: gb.QRelTable, *, num_queries: int,
 
     # --- GraphSampler steps 1-3 (Alg. 2): label propagation ---
     src, dst, w, valid = gb.symmetrize(edges)
-    if config.engine == "ell":
-        nbr, wgt = lp.edges_to_ell(src, dst, w, valid,
-                                   num_nodes=num_entities,
-                                   max_degree=config.max_degree)
-        lp_res = lp.propagate_ell(nbr, wgt, rounds=config.lp_rounds)
-    else:
-        lp_res = lp.propagate(src, dst, w, valid,
-                              num_nodes=num_entities,
-                              rounds=config.lp_rounds)
+    engine = eng.get_engine(config.engine)
+    lp_res = eng.run_engine(engine, src, dst, w, valid,
+                            num_nodes=num_entities,
+                            max_degree=config.max_degree,
+                            rounds=config.lp_rounds)
 
     # --- GraphSampler step 4: cluster sampling (universe = graph nodes) ---
     key = jax.random.PRNGKey(config.seed)

@@ -60,7 +60,9 @@ def cluster_sample(labels: jnp.ndarray, key: jax.Array, *,
 
     Every node whose label is kept is kept. The Bernoulli draw is keyed per
     label id, so the decision for a community is a pure function of
-    (key, label) — reproducible regardless of sharding.
+    (key, label) — reproducible regardless of sharding, which is what lets
+    the mesh-partitioned pipeline (sharded_pipeline.py, DESIGN.md §5)
+    reproduce the single-device mask bit-exactly.
 
     ``eligible`` restricts the sampling universe to nodes that appear in
     the affinity graph (Alg. 2's input is the GraphBuilder's edge tuples, so

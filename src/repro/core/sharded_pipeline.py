@@ -1,0 +1,187 @@
+"""Sharded WindTunnel pipeline — the single-device dataflow of pipeline.py
+partitioned across a device mesh with ``shard_map`` (DESIGN.md §5).
+
+Dataflow (one XLA program, one ``shard_map`` region):
+
+  1. **Query-partitioned GraphBuilder.**  The (tau-filtered) QRel table is
+     routed so that each device owns a contiguous block of query ids, then
+     each device builds its per-shard ELL table and enumerates affinity
+     pairs locally — the reduce-by-query self-join never leaves the shard
+     because a query's rows are never split.
+  2. **Edge merge.**  The per-shard pair lists are concatenated with a tiled
+     all-gather and deduplicated with the same sort + segment-max reduction
+     the single-device path uses (collectives.all_concat + gb.dedup_edges):
+     an all-gather + segment-max merge.
+  3. **Node-partitioned label propagation.**  The merged edge list is packed
+     into ELL adjacency rows for the local node block only (adjacency stays
+     sharded, O(N·K/d) per device); the i32[N] label vector is the cheap
+     replicated carry, refreshed by one label all-gather per round — the
+     communication lower bound for bounded-degree distributed LP.
+  4. **Sampling + reconstruction** run on the replicated outputs outside the
+     shard_map region.  The cluster-sampling Bernoulli draw is keyed per
+     label id (sampler.cluster_sample), so the sampled mask is a pure
+     function of (seed, labels) — bit-identical to the single-device path
+     on a 1-device mesh, and independent of the mesh shape given equal
+     labels.
+
+The LP round body follows ``config.engine``: ``ell`` (default) runs the
+dense XLA round, ``pallas`` runs the Pallas kernel on the local node block
+(interpret mode off-TPU).  The ``sort`` engine has no sharded formulation
+(its per-round global sort is exactly the shuffle this path removes) —
+selecting it here raises.
+
+Padding invariants: queries are padded to a multiple of the shard count
+(padded queries have no QRel rows), nodes to a multiple of the shard count
+(padded nodes have no edges, keep their own label, and are sliced off
+before sampling).  On a 1-device mesh both paddings are empty and every
+stage is operation-for-operation the single-device program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.core import graph_builder as gb
+from repro.core import label_prop as lp
+from repro.core import reconstructor as rc
+from repro.core import sampler as sm
+from repro.core import segment_utils as su
+from repro.core.pipeline import WindTunnelConfig, WindTunnelResult
+from repro.distributed import collectives as coll
+from repro.distributed.sharding import GNN_RULES, partition_axes
+
+
+def _mesh_axis_count(mesh: Mesh, axes: tuple) -> int:
+    d = 1
+    for a in axes:
+        d *= mesh.shape[a]
+    return d
+
+
+def _route_by_query(qrels: gb.QRelTable, *, num_shards: int,
+                    queries_per_shard: int) -> gb.QRelTable:
+    """Partition QRel rows into per-shard buffers of shape (d, n): shard
+    ``q // queries_per_shard`` owns every row of query q.  The stable sort
+    preserves original row order within a shard, so each shard's local
+    table is the compaction of its rows — downstream stable sorts see the
+    same tie order as the single-device path."""
+    n = qrels.query_ids.shape[0]
+    shard = jnp.where(qrels.valid, qrels.query_ids // queries_per_shard,
+                      num_shards)  # invalid rows route to the drop bucket
+    (ss,), (q, e, s, v) = su.sort_by(
+        (shard,), (qrels.query_ids, qrels.entity_ids, qrels.scores,
+                   qrels.valid.astype(jnp.int32)))
+    rank = su.group_rank(su.run_starts(ss))
+    row = jnp.where(ss < num_shards, ss, num_shards)
+    buf = lambda fill, dtype: jnp.full((num_shards, n), fill, dtype)
+    q_b = buf(0, jnp.int32).at[row, rank].set(q.astype(jnp.int32), mode="drop")
+    e_b = buf(0, jnp.int32).at[row, rank].set(e.astype(jnp.int32), mode="drop")
+    s_b = buf(0.0, jnp.float32).at[row, rank].set(s, mode="drop")
+    v_b = buf(0, jnp.int32).at[row, rank].set(v, mode="drop")
+    return gb.QRelTable(q_b, e_b, s_b, v_b)
+
+
+def _local_lp_round(nbr_labels, wgt, own, *, use_kernel: bool):
+    """One LP round on a local node block with pre-gathered neighbour
+    labels — either the jnp reference or the Pallas kernel (hot-loop
+    winner), both bit-identical to label_prop.ell_round."""
+    if not use_kernel:
+        from repro.kernels.label_prop.ref import label_prop_round_ref
+        return label_prop_round_ref(nbr_labels, wgt, own)
+    from repro.kernels.label_prop.ops import pallas_round_padded
+    return pallas_round_padded(nbr_labels, wgt, own)
+
+
+def run_windtunnel_sharded(qrels: gb.QRelTable, *, num_queries: int,
+                           num_entities: int, config: WindTunnelConfig,
+                           mesh: Mesh, axes: tuple = None
+                           ) -> WindTunnelResult:
+    """Mesh-partitioned ``run_windtunnel`` with identical semantics.
+
+    ``axes`` defaults to the GNN sharding rule for node/query arrays
+    filtered to the mesh (production: ('data', 'model'); host mesh: the
+    same names with total size 1).
+    """
+    if config.engine not in ("ell", "pallas"):
+        raise ValueError(
+            f"sharded pipeline requires an ELL-family engine ('ell' or "
+            f"'pallas'); got {config.engine!r} — the sort engine's global "
+            f"per-round shuffle is exactly what this path eliminates")
+    if axes is None:
+        axes = partition_axes(mesh, "nodes", GNN_RULES)
+    axes = tuple(axes) if axes else ()
+    if not axes:
+        raise ValueError(f"mesh {mesh} has none of the GNN node axes")
+    d = _mesh_axis_count(mesh, axes)
+
+    # Global tau: the only stage needing the full score distribution — a
+    # scalar quantile, computed replicated before partitioning.
+    tau = gb.threshold_tau(qrels, config.tau_quantile)
+    kept = gb.filter_qrels(qrels, tau)
+
+    qps = -(-num_queries // d)          # queries per shard (ceil)
+    rows_n = -(-num_entities // d)      # nodes per shard (ceil)
+    n_pad = rows_n * d
+    routed = _route_by_query(kept, num_shards=d, queries_per_shard=qps)
+    use_kernel = config.engine == "pallas"
+
+    def shard_fn(q_b, e_b, s_b, v_b):
+        # ---- local QRel block: (1, n) shard -> (n,) local table ----
+        idx = coll.flat_axis_index(axes)
+        valid = v_b[0].astype(bool)
+        q_local = jnp.where(valid, q_b[0] - idx * qps, 0).astype(jnp.int32)
+        local = gb.QRelTable(q_local, e_b[0], s_b[0], valid)
+
+        # ---- Alg. 1 on the shard: ELL group-by + pair enumeration ----
+        ell_e, ell_s = gb.build_ell(local, qps, config.fanout)
+        pairs = gb.affinity_pairs(ell_e, ell_s)
+
+        # ---- merge: all-gather pair lists, dedup with segment-max ----
+        gathered = coll.all_concat(pairs, axes)
+        edges = gb.dedup_edges(gathered)
+        src, dst, w, e_valid = gb.symmetrize(edges)
+
+        # ---- node-partitioned ELL adjacency (local rows only) ----
+        row0 = idx * rows_n
+        dst_local = dst - row0
+        mine = e_valid & (dst_local >= 0) & (dst_local < rows_n)
+        nbr_l, wgt_l = lp.edges_to_ell(
+            src, jnp.where(mine, dst_local, rows_n), w, mine,
+            num_nodes=rows_n, max_degree=config.max_degree)
+
+        # ---- LP rounds: sharded adjacency, replicated label carry ----
+        def one(labels, _):
+            own = lax.dynamic_slice(labels, (row0,), (rows_n,))
+            lab = jnp.where(nbr_l >= 0, labels[jnp.maximum(nbr_l, 0)], -1)
+            new = _local_lp_round(lab, wgt_l, own, use_kernel=use_kernel)
+            changed = lax.psum(jnp.sum((new != own).astype(jnp.int32)), axes)
+            return lax.all_gather(new, axes, tiled=True), changed
+
+        labels0 = coll.pvary_compat(jnp.arange(n_pad, dtype=jnp.int32), axes)
+        labels, changes = lax.scan(one, labels0, None,
+                                   length=config.lp_rounds)
+        labels = coll.unvary_compat(labels, axes)
+        return edges, labels, changes
+
+    shard_spec = P(axes if len(axes) > 1 else axes[0], None)
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(shard_spec,) * 4,
+                   out_specs=(gb.EdgeList(P(), P(), P(), P()), P(), P()),
+                   check_rep=False)
+    edges, labels, changes = fn(routed.query_ids, routed.entity_ids,
+                                routed.scores, routed.valid)
+    labels = labels[:num_entities]
+
+    # ---- sampling + reconstruction on replicated outputs (keyed per
+    # label id -> mesh-shape independent given equal labels) ----
+    degrees = gb.node_degrees(edges, num_entities)
+    key = jax.random.PRNGKey(config.seed)
+    sample = sm.cluster_sample(labels, key, num_nodes=num_entities,
+                               target_size=config.target_size,
+                               eligible=degrees > 0)
+    recon = rc.reconstruct(qrels, sample.entity_mask,
+                           num_queries=num_queries)
+    return WindTunnelResult(edges, labels, changes, sample, recon, degrees)

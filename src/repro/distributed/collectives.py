@@ -8,13 +8,61 @@ helpers cover the patterns we control explicitly:
   of each gradient (ZeRO-2 update placement);
 * ``delayed_psum`` — start a gradient all-reduce one microbatch early by
   accumulating into a carried buffer (compute/communication overlap in the
-  microbatched train loop).
+  microbatched train loop);
+* ``flat_axis_index`` / ``all_concat`` — gather/merge
+  primitives for the sharded WindTunnel pipeline (core/sharded_pipeline):
+  a tuple of mesh axes treated as one flattened collective axis, with the
+  first name most significant — consistent with ``lax.all_gather`` tiled
+  concatenation order over the same tuple;
+* ``pvary_compat`` / ``unvary_compat`` — portability shims for the
+  varying-manual-axes annotations newer JAX requires on replicated
+  ``shard_map`` scan carries (no-ops where ``lax.pvary`` is absent).
 """
 from __future__ import annotations
+
+from typing import Sequence, Union
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+AxisNames = Union[str, Sequence[str]]
+
+
+def _as_tuple(axis_names: AxisNames) -> tuple:
+    return (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
+
+
+def flat_axis_index(axis_names: AxisNames) -> jnp.ndarray:
+    """Row-major linear index over a tuple of mesh axes (first name most
+    significant), matching the shard order of a leading array dimension
+    partitioned with ``PartitionSpec(tuple(axis_names), ...)``."""
+    idx = jnp.int32(0)
+    for name in _as_tuple(axis_names):
+        idx = idx * lax.psum(jnp.int32(1), name) + lax.axis_index(name)
+    return idx
+
+
+def all_concat(tree, axis_names: AxisNames):
+    """All-gather every array leaf along its leading dim (tiled), i.e.
+    concatenate the per-shard tables into the replicated global table —
+    the merge half of the sharded GraphBuilder's edge dedup."""
+    axes = _as_tuple(axis_names)
+    return jax.tree.map(
+        lambda x: lax.all_gather(x, axes, axis=0, tiled=True), tree)
+
+
+def pvary_compat(x, axis_names: AxisNames):
+    """Mark a replicated value device-varying over ``axis_names`` where the
+    installed JAX tracks varying manual axes; identity elsewhere."""
+    if hasattr(lax, "pvary"):
+        return lax.pvary(x, _as_tuple(axis_names))
+    return x
+
+
+def unvary_compat(x, axis_names: AxisNames):
+    """Collapse a device-varying-but-equal value back to replicated."""
+    return lax.pmax(x, _as_tuple(axis_names))
 
 
 def psum_scatter_then_gather(x: jnp.ndarray, axis_name: str,

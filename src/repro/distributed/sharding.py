@@ -61,6 +61,7 @@ RECSYS_RULES = {
 GNN_RULES = {
     "nodes": ("data", "model"),   # node/edge arrays over the whole grid
     "edges": ("data", "model"),
+    "queries": ("data", "model"),  # WindTunnel QRel table, query-partitioned
     "feat": None,
     "param": None,                # MACE params are small -> replicate
     "batch": ("pod", "data"),
@@ -77,6 +78,18 @@ def _mesh_axes_for(mesh: Mesh, axis):
     if not present:
         return None
     return present if len(present) > 1 else present[0]
+
+
+def partition_axes(mesh: Mesh, logical_name: str, rules: dict) -> tuple:
+    """Mesh axes (present in ``mesh``) that a logical dimension partitions
+    over, as a tuple — e.g. GNN_RULES['nodes'] on the production mesh is
+    ('data', 'model'), on a 1-device host mesh ('data', 'model') of size 1.
+    The sharded WindTunnel pipeline treats the tuple as one flattened
+    collective axis (collectives.flat_axis_index)."""
+    axes = _mesh_axes_for(mesh, rules.get(logical_name))
+    if axes is None:
+        return ()
+    return axes if isinstance(axes, tuple) else (axes,)
 
 
 def logical_to_spec(mesh: Mesh, logical_axes: Optional[tuple],

@@ -14,22 +14,31 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def pallas_round_padded(nbr_labels: jnp.ndarray, wgt: jnp.ndarray,
+                        own: jnp.ndarray, *, block_n: int = 256):
+    """Run the Pallas round kernel on pre-gathered neighbour labels
+    (N, K), padding N up to the node block; interpret mode off-TPU.
+    Shared by the single-device pallas engine and the sharded pipeline's
+    local node blocks."""
+    rows = nbr_labels.shape[0]
+    bn = min(block_n, max(8, rows))
+    pad = (-rows) % bn
+    lab_p = jnp.pad(nbr_labels, ((0, pad), (0, 0)), constant_values=-1)
+    wgt_p = jnp.pad(wgt, ((0, pad), (0, 0)))
+    own_p = jnp.pad(own, (0, pad))
+    out = label_prop_round_pallas(lab_p, wgt_p, own_p, block_n=bn,
+                                  interpret=not _on_tpu())
+    return out[:rows]
+
+
 @functools.partial(jax.jit, static_argnames=("block_n", "use_kernel"))
 def label_prop_round(labels: jnp.ndarray, nbr: jnp.ndarray,
                      wgt: jnp.ndarray, *, block_n: int = 256,
                      use_kernel: bool = True):
     """One LP round over ELL adjacency: labels (N,), nbr (N, K) node ids
     (-1 pad), wgt (N, K). Returns new labels (N,)."""
-    n, k = nbr.shape
     lab = jnp.where(nbr >= 0, labels[jnp.maximum(nbr, 0)], -1)
     if not use_kernel:
         from repro.kernels.label_prop.ref import label_prop_round_ref
         return label_prop_round_ref(lab, wgt, labels)
-    bn = min(block_n, max(8, n))
-    pad = (-n) % bn
-    lab_p = jnp.pad(lab, ((0, pad), (0, 0)), constant_values=-1)
-    wgt_p = jnp.pad(wgt, ((0, pad), (0, 0)))
-    own_p = jnp.pad(labels, (0, pad))
-    out = label_prop_round_pallas(lab_p, wgt_p, own_p, block_n=bn,
-                                  interpret=not _on_tpu())
-    return out[:n]
+    return pallas_round_padded(lab, wgt, labels, block_n=block_n)

@@ -17,8 +17,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (QRelTable, WindTunnelConfig, fit_em, run_windtunnel)
+from repro.core import (QRelTable, WindTunnelConfig, available_engines,
+                        fit_em, run_windtunnel, run_windtunnel_sharded)
 from repro.data.synthetic import generate_corpus
+from repro.launch.mesh import make_host_mesh
+
+
+def _make_mesh(name: str):
+    """--mesh flag: 'host' = 1-device mesh with production axis names;
+    'auto' = all local devices on the 'data' axis."""
+    if name == "host":
+        return make_host_mesh()
+    return jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
 
 
 def main(argv=None):
@@ -31,10 +41,23 @@ def main(argv=None):
     p.add_argument("--tau-quantile", type=float, default=0.5)
     p.add_argument("--fanout", type=int, default=16)
     p.add_argument("--lp-rounds", type=int, default=5)
-    p.add_argument("--engine", default="sort", choices=["sort", "ell"])
+    p.add_argument("--engine", default="sort",
+                   choices=list(available_engines()),
+                   help="label-prop engine from the registry "
+                        "(core/engines.py)")
+    p.add_argument("--sharded", action="store_true",
+                   help="run the mesh-partitioned pipeline "
+                        "(core/sharded_pipeline.py; requires an ELL-family "
+                        "engine)")
+    p.add_argument("--mesh", default="host", choices=["host", "auto"],
+                   help="mesh for --sharded: 1-device host mesh or all "
+                        "local devices on the data axis")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args(argv)
+    if args.sharded and args.engine == "sort":
+        p.error("--sharded requires an ELL-family engine; "
+                "pass --engine ell or --engine pallas")
 
     corpus = generate_corpus(
         num_queries=args.queries, qrels_per_query=args.qrels_per_query,
@@ -48,9 +71,17 @@ def main(argv=None):
         tau_quantile=args.tau_quantile, fanout=args.fanout,
         lp_rounds=args.lp_rounds, engine=args.engine,
         target_size=args.target_frac * corpus.num_primary, seed=args.seed)
-    res = jax.jit(lambda q: run_windtunnel(
-        q, num_queries=corpus.num_queries,
-        num_entities=corpus.num_entities, config=cfg))(qrels)
+    if args.sharded:
+        mesh = _make_mesh(args.mesh)
+        print(f"sharded pipeline on mesh {dict(mesh.shape)} "
+              f"(engine={cfg.engine})")
+        res = run_windtunnel_sharded(
+            qrels, num_queries=corpus.num_queries,
+            num_entities=corpus.num_entities, config=cfg, mesh=mesh)
+    else:
+        res = jax.jit(lambda q: run_windtunnel(
+            q, num_queries=corpus.num_queries,
+            num_entities=corpus.num_entities, config=cfg))(qrels)
 
     mask = np.asarray(res.sample.entity_mask)
     labels = np.asarray(res.labels)

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed; see requirements.txt")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import graph_builder as gb
