@@ -162,6 +162,37 @@ def bench_kernels():
 
 
 # ---------------------------------------------------------------------------
+# Eval subsystem: retrieval-engine build/search across corpus sizes
+# (rows = engine x corpus size; the grid runner's index/search stages)
+# ---------------------------------------------------------------------------
+
+def bench_eval():
+    from repro.data.synthetic import generate_corpus
+    from repro.eval.engines import (available_retrieval_engines,
+                                    get_retrieval_engine)
+    from repro.eval.runner import tfidf_embedder
+
+    key = jax.random.PRNGKey(0)
+    for nq in (128, 512):
+        corpus = generate_corpus(num_queries=nq, qrels_per_query=8,
+                                 num_topics=16, aux_fraction=0.5,
+                                 vocab_size=1024, passage_len=32,
+                                 query_len=12, seed=0, pad_multiple=256)
+        ev, qv = tfidf_embedder(corpus)
+        vecs = jnp.asarray(ev)
+        queries = jnp.asarray(qv[:min(128, corpus.num_queries)])
+        n = corpus.num_entities
+        for name in available_retrieval_engines():
+            eng = get_retrieval_engine(name)
+            t0 = time.time()
+            index = jax.block_until_ready(eng.build(key, vecs))
+            us_build = (time.time() - t0) * 1e6
+            us = _timeit(lambda: eng.search(index, queries, k=10))
+            row(f"eval_search[{name}|N={n}]", us,
+                f"build_us={us_build:.0f} Q={queries.shape[0]} k=10")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -192,6 +223,7 @@ BENCHES = {
     "fig4": bench_fig4,
     "table1": bench_table1_table2,
     "kernels": bench_kernels,
+    "eval": bench_eval,
     "roofline": bench_roofline,
 }
 

@@ -1,9 +1,14 @@
-"""End-to-end driver (paper §III-B): train the embedding model, index three
-corpus variants (full / uniform / WindTunnel), run the semantic-search
-pipeline, and report Tables I & II. Persists results/table1.json for the
-benchmark harness.
+"""End-to-end driver (paper §III-B): run the (sampler × engine × k × metric)
+experiment grid over full / uniform / WindTunnel samples through the
+trie-shared plan runner (repro.eval) and print the sample-fidelity report —
+metric deltas vs the full corpus plus Kendall-τ preservation of the engine
+ranking.  Persists results/table1.json (p@3 + rho_q per sampler, the
+Table I/II numbers) for the benchmark harness, plus the full grid.
 
   PYTHONPATH=src python examples/sample_and_evaluate.py [--fast]
+
+--fast uses the deterministic tf-idf reference embedder; the default trains
+the transformer encoder and plugs it into the same runner as the embedder.
 """
 import argparse
 import json
@@ -18,10 +23,14 @@ def main():
     p.add_argument("--fast", action="store_true",
                    help="tf-idf reference embedder instead of training")
     p.add_argument("--encoder-steps", type=int, default=800)
+    p.add_argument("--full-grid", action="store_true",
+                   help="also run k=10 (doubles the search stages)")
     p.add_argument("--out", default="results/table1.json")
     args = p.parse_args()
 
     from repro.data.synthetic import generate_corpus
+    from repro.eval import (GridSpec, build_fidelity_report,
+                            format_fidelity_report, run_grid)
     corpus = generate_corpus(num_queries=1280, qrels_per_query=32,
                              num_topics=96, aux_fraction=2.0, seed=0,
                              query_len=24, vocab_size=3072)
@@ -29,44 +38,47 @@ def main():
           f"({corpus.num_primary} judged)")
 
     if args.fast:
-        import jax, jax.numpy as jnp, numpy as np
-        from repro.core import QRelTable, WindTunnelConfig, run_windtunnel
-        from repro.retrieval.experiment import evaluate_sample
-        from repro.retrieval.tfidf import tfidf_vectors
-        ev, df = tfidf_vectors(corpus.passage_tokens, corpus.vocab_size)
-        qv, _ = tfidf_vectors(corpus.query_tokens, corpus.vocab_size)
-        qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
-        cfg = WindTunnelConfig(tau_quantile=0.5, fanout=16, lp_rounds=5,
-                               target_size=0.15 * corpus.num_primary, seed=0)
-        res = jax.jit(lambda q: run_windtunnel(
-            q, num_queries=corpus.num_queries,
-            num_entities=corpus.num_entities, config=cfg))(qrels)
-        wt = np.asarray(res.sample.entity_mask)
-        rng = np.random.default_rng(7)
-        uni = np.zeros(corpus.num_entities, bool)
-        uni[:corpus.num_primary] = rng.random(corpus.num_primary) < \
-            wt.sum() / corpus.num_primary
-        results = {}
-        for name, mask in [("full", None), ("uniform", uni),
-                           ("windtunnel", wt)]:
-            r = evaluate_sample(name, corpus, ev, qv, mask, seed=0,
-                                engine="exact", query_chunk=128)
-            results[name] = r
-            print(f"  {name:12s} p@3={r.p_at_3:.3f} rho_q={r.rho_q:.3f}")
-        out = {k: {"p_at_3": v.p_at_3, "rho_q": v.rho_q,
-                   "n_entities": v.n_entities, "n_queries": v.n_queries}
-               for k, v in results.items()}
+        embedder = None  # runner default: tf-idf reference embedder
     else:
-        from repro.retrieval.encoder import EncoderConfig
-        from repro.retrieval.experiment import run_table1_experiment
+        from repro.retrieval.encoder import EncoderConfig, embed_corpus
+        from repro.retrieval.experiment import train_encoder
         enc = EncoderConfig(vocab_size=3072, d_model=192, n_layers=2,
                             n_heads=4, d_ff=384)
-        results = run_table1_experiment(corpus, encoder_cfg=enc,
-                                        encoder_steps=args.encoder_steps,
-                                        seed=0)
-        out = {k: {"p_at_3": v.p_at_3, "rho_q": v.rho_q,
-                   "n_entities": v.n_entities, "n_queries": v.n_queries}
-               for k, v in results.items()}
+        print("training embedding model...")
+        params, _ = train_encoder(corpus, enc, steps=args.encoder_steps,
+                                  seed=0)
+
+        def embedder(c):
+            return (embed_corpus(params, c.passage_tokens, enc),
+                    embed_corpus(params, c.query_tokens, enc))
+
+    spec = GridSpec(samplers=("full", "uniform", "windtunnel"),
+                    engines=("exact", "ivfflat", "lsh", "tfidf"),
+                    ks=(3, 10) if args.full_grid else (3,),
+                    metrics=("precision", "recall", "ndcg", "mrr"),
+                    sample_frac=0.15, max_queries=512, seed=0)
+    result = run_grid(corpus, spec, embedder=embedder, query_chunk=128,
+                      verbose=True)
+
+    print("\nplan-trie stage counters:")
+    print(result.trie.summary())
+    report = build_fidelity_report(result.cells, spec)
+    print()
+    print(format_fidelity_report(report, spec))
+
+    # Table I/II summary (p@3 on the paper's ivfflat index + rho_q), kept in
+    # the shape benchmarks/run.py reads back.
+    out = {}
+    for s in spec.samplers:
+        stats = result.sampler_stats[s]
+        out[s] = {"p_at_3": result.cells[(s, "ivfflat", 3, "precision")],
+                  "rho_q": stats["rho_q"],
+                  "n_entities": stats["n_entities"],
+                  "n_queries": stats["n_queries"]}
+        print(f"  {s:12s} p@3={out[s]['p_at_3']:.3f} "
+              f"rho_q={out[s]['rho_q']:.3f}")
+    out["grid"] = result.to_json()
+    out["fidelity"] = report.to_json()
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

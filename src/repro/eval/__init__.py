@@ -1,0 +1,35 @@
+"""Experiment-grid evaluation subsystem (DESIGN.md §8).
+
+The paper's value claim is that a community-aware sample preserves the
+*conclusions* of end-to-end IR experiments, not just headline numbers.  This
+package turns that claim into a measurable artifact:
+
+* ``engines``  — a :class:`RetrievalEngine` registry (exact / ivfflat / lsh /
+  tfidf) behind one ``build``/``search`` protocol, mirroring the LP-engine
+  registry in ``core/engines.py``.
+* ``plans``    — declarative (sampler × engine × k × metric) grids expanded
+  into a stage trie (corpus → embed → sample → index → search → metric);
+  shared prefixes execute exactly once, with per-node counters.
+* ``runner``   — stage implementations walking each grid cell through the
+  trie over a :class:`~repro.data.synthetic.SyntheticCorpus`.
+* ``fidelity`` — per-metric deltas of each sampler vs the full corpus and
+  Kendall-τ preservation of the engine ranking (does the sample pick the
+  same winning index as the full corpus? — the question of paper §I).
+"""
+from repro.eval.engines import (RetrievalEngine, available_retrieval_engines,
+                                get_retrieval_engine, register_retrieval_engine)
+from repro.eval.fidelity import (FidelityReport, build_fidelity_report,
+                                 format_fidelity_report, kendall_tau)
+from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
+                              expand_grid)
+from repro.eval.runner import (GridResult, available_samplers, run_grid,
+                               tfidf_embedder)
+
+__all__ = [
+    "RetrievalEngine", "available_retrieval_engines", "get_retrieval_engine",
+    "register_retrieval_engine",
+    "GridSpec", "RunSpec", "PlanTrie", "expand_grid", "execute_plan",
+    "GridResult", "run_grid", "tfidf_embedder", "available_samplers",
+    "FidelityReport", "build_fidelity_report", "format_fidelity_report",
+    "kendall_tau",
+]

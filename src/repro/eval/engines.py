@@ -1,0 +1,17 @@
+"""Retrieval-engine registry — the eval subsystem's façade over
+``repro.retrieval.engines``, where the implementation lives (below both this
+package and ``retrieval/experiment.py``, so neither depends upward on the
+other).  See that module and DESIGN.md §8 for the protocol and the
+registered ``exact`` / ``ivfflat`` / ``lsh`` / ``tfidf`` engines.
+"""
+from repro.retrieval.engines import (ExactEngine, IVFFlatEngine, LSHEngine,
+                                     RetrievalEngine, TfIdfEngine,
+                                     TfIdfIndex, available_retrieval_engines,
+                                     chunked_search, get_retrieval_engine,
+                                     register_retrieval_engine)
+
+__all__ = [
+    "RetrievalEngine", "available_retrieval_engines",
+    "get_retrieval_engine", "register_retrieval_engine", "chunked_search",
+    "ExactEngine", "IVFFlatEngine", "LSHEngine", "TfIdfEngine", "TfIdfIndex",
+]

@@ -1,0 +1,152 @@
+"""Sample-fidelity report — does the sample preserve experimental
+conclusions? (paper §I).
+
+Two views on a finished :class:`~repro.eval.runner.GridResult`:
+
+* **Metric deltas** — per cell, value(sampler) − value(baseline) for the
+  same (engine, k, metric); aggregated to mean |Δ| per (sampler, metric).
+  Small deltas mean absolute numbers survive sampling.
+* **System-ranking preservation** — for each (metric, k) the grid induces a
+  ranking of retrieval engines; Kendall-τ between each sampler's ranking
+  and the full corpus's, plus whether the *winning* engine agrees.  This is
+  the question the paper's §I poses: can the cheap sample pick the same
+  winning system as the full corpus would?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+from repro.eval.plans import GridSpec
+
+
+def kendall_tau(a: Sequence[float], b: Sequence[float]) -> float:
+    """Kendall's τ-b between two score vectors over the same systems
+    (tie-corrected; O(n²), fine for system-ranking sized inputs)."""
+    a = np.asarray(a, float)
+    b = np.asarray(b, float)
+    if a.size != b.size:
+        raise ValueError(f"score vectors differ in length: {a.size} vs {b.size}")
+    conc = disc = ties_a = ties_b = 0
+    for i in range(a.size):
+        for j in range(i + 1, a.size):
+            sa = np.sign(a[i] - a[j])
+            sb = np.sign(b[i] - b[j])
+            if sa == 0 and sb == 0:
+                continue
+            elif sa == 0:
+                ties_a += 1
+            elif sb == 0:
+                ties_b += 1
+            elif sa == sb:
+                conc += 1
+            else:
+                disc += 1
+    denom = np.sqrt(float(conc + disc + ties_a) * float(conc + disc + ties_b))
+    return float((conc - disc) / denom) if denom > 0 else 0.0
+
+
+@dataclasses.dataclass
+class FidelityReport:
+    baseline: str
+    #: (sampler, engine, k, metric) -> value(sampler) - value(baseline)
+    cell_deltas: Dict[Tuple[str, str, int, str], float]
+    #: (sampler, metric) -> mean |delta| over engines and ks
+    mean_abs_delta: Dict[Tuple[str, str], float]
+    #: (sampler, metric) -> mean Kendall-tau over ks vs the baseline ranking
+    tau: Dict[Tuple[str, str], float]
+    #: (sampler, metric) -> engine with the best mean-over-k score
+    winners: Dict[Tuple[str, str], str]
+    #: (sampler, metric) -> winner matches the baseline's winner
+    winner_agreement: Dict[Tuple[str, str], bool]
+
+    def to_json(self) -> dict:
+        return {
+            "baseline": self.baseline,
+            "cell_deltas": [{"sampler": s, "engine": e, "k": k, "metric": m,
+                             "delta": d}
+                            for (s, e, k, m), d
+                            in sorted(self.cell_deltas.items())],
+            "mean_abs_delta": [{"sampler": s, "metric": m, "value": v}
+                               for (s, m), v
+                               in sorted(self.mean_abs_delta.items())],
+            "kendall_tau": [{"sampler": s, "metric": m, "value": v}
+                            for (s, m), v in sorted(self.tau.items())],
+            "winners": [{"sampler": s, "metric": m, "engine": e,
+                         "agrees_with_baseline":
+                             self.winner_agreement.get((s, m), True)}
+                        for (s, m), e in sorted(self.winners.items())],
+        }
+
+
+def _engine_scores(cells, sampler: str, metric: str, k: int,
+                   engines: Sequence[str]):
+    return [cells[(sampler, e, k, metric)] for e in engines]
+
+
+def build_fidelity_report(cells: Dict[Tuple[str, str, int, str], float],
+                          spec: GridSpec, *, baseline: str = "full"
+                          ) -> FidelityReport:
+    if baseline not in spec.samplers:
+        raise ValueError(f"baseline sampler {baseline!r} not in grid "
+                         f"{spec.samplers}")
+    others = [s for s in spec.samplers if s != baseline]
+
+    cell_deltas = {}
+    for s in others:
+        for e in spec.engines:
+            for k in spec.ks:
+                for m in spec.metrics:
+                    cell_deltas[(s, e, k, m)] = (
+                        cells[(s, e, k, m)] - cells[(baseline, e, k, m)])
+
+    mean_abs_delta = {}
+    for s in others:
+        for m in spec.metrics:
+            ds = [abs(cell_deltas[(s, e, k, m)])
+                  for e in spec.engines for k in spec.ks]
+            mean_abs_delta[(s, m)] = float(np.mean(ds))
+
+    tau = {}
+    for s in others:
+        for m in spec.metrics:
+            taus = [kendall_tau(
+                _engine_scores(cells, s, m, k, spec.engines),
+                _engine_scores(cells, baseline, m, k, spec.engines))
+                for k in spec.ks]
+            tau[(s, m)] = float(np.mean(taus))
+
+    winners = {}
+    for s in spec.samplers:
+        for m in spec.metrics:
+            mean_over_k = [np.mean([cells[(s, e, k, m)] for k in spec.ks])
+                           for e in spec.engines]
+            winners[(s, m)] = spec.engines[int(np.argmax(mean_over_k))]
+    winner_agreement = {(s, m): winners[(s, m)] == winners[(baseline, m)]
+                        for s in others for m in spec.metrics}
+
+    return FidelityReport(baseline, cell_deltas, mean_abs_delta, tau,
+                          winners, winner_agreement)
+
+
+def format_fidelity_report(report: FidelityReport, spec: GridSpec) -> str:
+    """Human-readable fidelity table, one block per non-baseline sampler."""
+    others = [s for s in spec.samplers if s != report.baseline]
+    lines = [f"sample-fidelity report (baseline: {report.baseline})",
+             ""]
+    for s in others:
+        lines.append(f"[{s}]")
+        lines.append(f"  {'metric':<10s} {'mean|Δ|':>8s} {'τ(rank)':>8s} "
+                     f"{'winner':>8s}  agrees")
+        for m in spec.metrics:
+            win = report.winners[(s, m)]
+            agree = "yes" if report.winner_agreement[(s, m)] else "NO"
+            lines.append(f"  {m:<10s} {report.mean_abs_delta[(s, m)]:8.4f} "
+                         f"{report.tau[(s, m)]:8.3f} {win:>8s}  {agree}")
+        lines.append("")
+    base = ", ".join(f"{m}:{report.winners[(report.baseline, m)]}"
+                     for m in spec.metrics)
+    lines.append(f"baseline winners — {base}")
+    return "\n".join(lines)

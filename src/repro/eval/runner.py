@@ -1,0 +1,230 @@
+"""Grid runner — stage implementations for the experiment-plan trie.
+
+``run_grid`` walks every (sampler × engine × k × metric) cell of a
+:class:`~repro.eval.plans.GridSpec` through the stage trie over one
+:class:`~repro.data.synthetic.SyntheticCorpus`:
+
+  corpus  — qrel lookup structures (pair set + per-query dict), built once.
+  embed   — entity + query vectors from a pluggable embedder (default:
+            the deterministic tf-idf reference embedder), built once.
+  sample  — entity mask from the sampler registry (full / uniform /
+            windtunnel), associated queries and query density, once per
+            sampler.
+  index   — ``RetrievalEngine.build`` over the sample's kept vectors, once
+            per (sampler, engine).
+  search  — chunked ``RetrievalEngine.search`` mapped back to global entity
+            ids, once per (sampler, engine, k) — the built index is reused
+            across k values and metrics.
+  metric  — scalar from the metric registry, per cell.
+
+Samplers and metrics are registries too, so new sampling baselines or IR
+measures extend the grid without touching this walker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (QRelTable, WindTunnelConfig, query_density,
+                        run_windtunnel)
+from repro.data.synthetic import SyntheticCorpus
+from repro.eval.engines import chunked_search, get_retrieval_engine
+from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
+                              expand_grid)
+from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
+                                     qrel_dict, qrel_set, recall_at_k)
+from repro.retrieval.tfidf import tfidf_vectors
+
+# --------------------------------------------------------------------------
+# sampler registry: name -> fn(corpus, spec) -> Optional[bool mask] (None =
+# full corpus).  Samplers are independent of one another so the trie can
+# compute them in any order.
+# --------------------------------------------------------------------------
+
+_SAMPLERS: Dict[str, Callable[[SyntheticCorpus, GridSpec],
+                              Optional[np.ndarray]]] = {}
+
+
+def register_sampler(name: str):
+    def deco(fn):
+        _SAMPLERS[name] = fn
+        return fn
+    return deco
+
+
+def available_samplers() -> tuple:
+    return tuple(sorted(_SAMPLERS))
+
+
+@register_sampler("full")
+def _sample_full(corpus: SyntheticCorpus, spec: GridSpec):
+    return None
+
+
+@register_sampler("uniform")
+def _sample_uniform(corpus: SyntheticCorpus, spec: GridSpec):
+    """Uniform over the judged entities at the grid's sample fraction —
+    the paper's community-destroying baseline.
+
+    Samplers are independent trie nodes, so this draws at ``sample_frac``
+    rather than at the WindTunnel sample's *realized* rate; the windtunnel
+    sampler's target_size calibration aims at the same fraction, keeping
+    the two approximately (not exactly) size-matched.  Realized sizes are
+    reported per sampler in ``GridResult.sampler_stats`` — check them
+    before attributing small metric deltas to the sampling strategy."""
+    rng = np.random.default_rng(spec.seed + 7)
+    mask = np.zeros(corpus.num_entities, bool)
+    mask[:corpus.num_primary] = rng.random(corpus.num_primary) < \
+        spec.sample_frac
+    return mask
+
+
+@register_sampler("windtunnel")
+def _sample_windtunnel(corpus: SyntheticCorpus, spec: GridSpec):
+    cfg = WindTunnelConfig(
+        tau_quantile=0.5, fanout=16, lp_rounds=5,
+        target_size=spec.sample_frac * corpus.num_primary, seed=spec.seed)
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    res = jax.jit(lambda q: run_windtunnel(
+        q, num_queries=corpus.num_queries,
+        num_entities=corpus.num_entities, config=cfg))(qrels)
+    return np.asarray(res.sample.entity_mask)
+
+
+# --------------------------------------------------------------------------
+# metric registry: name -> fn(global_ids, qids, ctx, k) -> float, where ctx
+# is the corpus-stage value ({"pairs": set, "by_query": dict}).
+# --------------------------------------------------------------------------
+
+METRICS: Dict[str, Callable[..., float]] = {
+    "precision": lambda ids, qids, ctx, k:
+        precision_at_k(ids, qids, ctx["pairs"], k=k),
+    "recall": lambda ids, qids, ctx, k:
+        recall_at_k(ids, qids, ctx["by_query"], k=k),
+    "ndcg": lambda ids, qids, ctx, k:
+        ndcg_at_k(ids, qids, ctx["by_query"], k=k),
+    "mrr": lambda ids, qids, ctx, k:
+        mrr(ids, qids, ctx["by_query"], k=k),
+}
+
+
+def tfidf_embedder(corpus: SyntheticCorpus):
+    """Default embedder: deterministic tf-idf bag-of-words vectors for both
+    entities and queries (document df reused for the queries)."""
+    ev, df = tfidf_vectors(corpus.passage_tokens, corpus.vocab_size)
+    qv, _ = tfidf_vectors(corpus.query_tokens, corpus.vocab_size, df=df)
+    return ev, qv
+
+
+def _associated_queries(corpus: SyntheticCorpus, mask: np.ndarray,
+                        max_queries: int, seed: int):
+    """Queries with >=1 relevant kept entity, subsampled to ``max_queries``
+    (the reconstructor's query-association rule, host-side)."""
+    q = np.asarray(corpus.qrels.query_ids)
+    e = np.asarray(corpus.qrels.entity_ids)
+    v = np.asarray(corpus.qrels.valid)
+    assoc = np.zeros(corpus.num_queries, bool)
+    rows = v & mask[np.clip(e, 0, corpus.num_entities - 1)]
+    assoc[q[rows]] = True
+    qids = np.nonzero(assoc)[0]
+    if qids.size > max_queries:
+        rng = np.random.default_rng(seed)
+        qids = np.sort(rng.choice(qids, max_queries, replace=False))
+    return assoc, qids
+
+
+@dataclasses.dataclass
+class GridResult:
+    spec: GridSpec
+    cells: Dict[Tuple[str, str, int, str], float]
+    sampler_stats: Dict[str, Dict[str, float]]
+    trie: PlanTrie
+
+    def to_json(self) -> dict:
+        return {
+            "spec": dataclasses.asdict(self.spec),
+            "cells": [{"sampler": s, "engine": e, "k": k, "metric": m,
+                       "value": v}
+                      for (s, e, k, m), v in sorted(self.cells.items())],
+            "sampler_stats": self.sampler_stats,
+            "stage_counts": {st: {"executions": ex, "requests": rq}
+                             for st, (ex, rq)
+                             in self.trie.stage_counts().items()},
+        }
+
+
+def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
+             embedder: Optional[Callable] = None, query_chunk: int = 256,
+             verbose: bool = False) -> GridResult:
+    """Execute every cell of ``spec`` over ``corpus`` via the plan trie."""
+    embedder = embedder or tfidf_embedder
+    sampler_stats: Dict[str, Dict[str, float]] = {}
+
+    def stage_corpus(parent: Any, run: RunSpec) -> dict:
+        del parent, run
+        qr = corpus.qrels
+        return {"pairs": qrel_set(qr.query_ids, qr.entity_ids, qr.valid),
+                "by_query": qrel_dict(qr.query_ids, qr.entity_ids, qr.valid)}
+
+    def stage_embed(ctx: dict, run: RunSpec) -> dict:
+        del run
+        ev, qv = embedder(corpus)
+        return {**ctx, "ev": np.asarray(ev), "qv": np.asarray(qv)}
+
+    def stage_sample(ctx: dict, run: RunSpec) -> dict:
+        try:
+            sampler = _SAMPLERS[run.sampler]
+        except KeyError:
+            raise ValueError(
+                f"unknown sampler {run.sampler!r}; registered samplers: "
+                f"{', '.join(available_samplers())}") from None
+        mask = sampler(corpus, spec)
+        mask = (np.ones(corpus.num_entities, bool) if mask is None
+                else np.asarray(mask))
+        kept_ids = np.nonzero(mask)[0]
+        assoc, qids = _associated_queries(corpus, mask, spec.max_queries,
+                                          spec.seed)
+        rho = float(query_density(
+            QRelTable(*(jnp.asarray(x) for x in corpus.qrels)),
+            jnp.asarray(mask), jnp.asarray(assoc),
+            num_queries=corpus.num_queries,
+            num_entities=corpus.num_entities))
+        sampler_stats[run.sampler] = {"n_entities": int(kept_ids.size),
+                                      "n_queries": int(qids.size),
+                                      "rho_q": rho}
+        if verbose:
+            print(f"  sample[{run.sampler}]: {kept_ids.size} entities, "
+                  f"{qids.size} queries, rho_q={rho:.3f}")
+        return {**ctx, "kept_ids": kept_ids, "qids": qids}
+
+    def stage_index(ctx: dict, run: RunSpec) -> dict:
+        engine = get_retrieval_engine(run.engine)
+        sub_vecs = jnp.asarray(ctx["ev"][ctx["kept_ids"]])
+        index = engine.build(jax.random.PRNGKey(spec.seed), sub_vecs)
+        return {**ctx, "engine": engine, "index": index}
+
+    def stage_search(ctx: dict, run: RunSpec) -> dict:
+        global_ids = chunked_search(
+            ctx["engine"], ctx["index"], ctx["qv"][ctx["qids"]],
+            ctx["kept_ids"], k=run.k, query_chunk=query_chunk)
+        return {**ctx, "global_ids": global_ids}
+
+    def stage_metric(ctx: dict, run: RunSpec) -> float:
+        try:
+            metric = METRICS[run.metric]
+        except KeyError:
+            raise ValueError(
+                f"unknown metric {run.metric!r}; registered metrics: "
+                f"{', '.join(sorted(METRICS))}") from None
+        return float(metric(ctx["global_ids"], ctx["qids"], ctx, run.k))
+
+    cells, trie = execute_plan(expand_grid(spec), {
+        "corpus": stage_corpus, "embed": stage_embed,
+        "sample": stage_sample, "index": stage_index,
+        "search": stage_search, "metric": stage_metric,
+    })
+    return GridResult(spec, cells, sampler_stats, trie)

@@ -1,2 +1,2 @@
-"""Launchers: production mesh builders, the multi-pod dry-run, training and
-sampling CLIs."""
+"""Launchers: production mesh builders, the multi-pod dry-run, training,
+sampling and experiment-grid evaluation CLIs."""

@@ -1,0 +1,115 @@
+"""Experiment-grid evaluation CLI (DESIGN.md §8) — runs a declarative
+(sampler × retrieval engine × k × metric) grid over the synthetic corpus
+through the trie-shared plan executor and prints the sample-fidelity report.
+
+  PYTHONPATH=src python -m repro.launch.evaluate --grid default
+  PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --json results/eval.json
+  PYTHONPATH=src python -m repro.launch.evaluate --engines exact,lsh --ks 3,10,20
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro.data.synthetic import generate_corpus
+from repro.eval import (GridSpec, available_retrieval_engines,
+                        available_samplers, build_fidelity_report,
+                        format_fidelity_report, run_grid)
+
+GRIDS = {
+    # 3 samplers x 4 engines x 2 ks x 4 metrics = 96 cells
+    "default": GridSpec(),
+    # minimal end-to-end check: 3 samplers x 2 engines x 1 k x 2 metrics
+    "smoke": GridSpec(engines=("exact", "tfidf"), ks=(3,),
+                      metrics=("precision", "mrr"), max_queries=128),
+}
+
+
+def _csv(s):
+    return tuple(x for x in s.split(",") if x)
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--grid", default="default", choices=sorted(GRIDS),
+                   help="grid preset; axis flags below override it")
+    p.add_argument("--samplers", default=None,
+                   help="comma list from " + ",".join(available_samplers()))
+    p.add_argument("--engines", default=None,
+                   help="comma list from "
+                        + ",".join(available_retrieval_engines()))
+    p.add_argument("--ks", default=None, help="comma list of cutoffs")
+    p.add_argument("--metrics", default=None,
+                   help="comma list of precision,recall,ndcg,mrr")
+    p.add_argument("--sample-frac", type=float, default=None)
+    p.add_argument("--max-queries", type=int, default=None)
+    p.add_argument("--queries", type=int, default=512,
+                   help="synthetic corpus size (queries)")
+    p.add_argument("--qrels-per-query", type=int, default=16)
+    p.add_argument("--topics", type=int, default=48)
+    p.add_argument("--aux-fraction", type=float, default=1.0)
+    p.add_argument("--vocab", type=int, default=2048)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="persist grid cells + fidelity report as JSON")
+    args = p.parse_args(argv)
+
+    spec = GRIDS[args.grid]
+    overrides = {}
+    if args.samplers:
+        overrides["samplers"] = _csv(args.samplers)
+    if args.engines:
+        overrides["engines"] = _csv(args.engines)
+    if args.ks:
+        overrides["ks"] = tuple(int(k) for k in _csv(args.ks))
+    if args.metrics:
+        overrides["metrics"] = _csv(args.metrics)
+    if args.sample_frac is not None:
+        overrides["sample_frac"] = args.sample_frac
+    if args.max_queries is not None:
+        overrides["max_queries"] = args.max_queries
+    overrides["seed"] = args.seed
+    spec = dataclasses.replace(spec, **overrides)
+
+    corpus = generate_corpus(
+        num_queries=args.queries, qrels_per_query=args.qrels_per_query,
+        num_topics=args.topics, aux_fraction=args.aux_fraction,
+        vocab_size=args.vocab, query_len=24, seed=args.seed)
+    print(f"corpus: {corpus.num_entities} entities "
+          f"({corpus.num_primary} judged), {corpus.num_queries} queries")
+    print(f"grid: {len(spec.samplers)} samplers x {len(spec.engines)} "
+          f"engines x {len(spec.ks)} ks x {len(spec.metrics)} metrics "
+          f"= {spec.num_cells} cells")
+
+    result = run_grid(corpus, spec, verbose=True)
+
+    print("\ncells (sampler, engine, k, metric -> value):")
+    for (s, e, k, m), v in sorted(result.cells.items()):
+        print(f"  {s:<11s} {e:<8s} k={k:<3d} {m:<10s} {v:.4f}")
+
+    print("\nplan-trie stage counters (shared prefixes executed once):")
+    print(result.trie.summary())
+
+    report = None
+    if "full" in spec.samplers:
+        report = build_fidelity_report(result.cells, spec)
+        print()
+        print(format_fidelity_report(report, spec))
+    else:
+        print("\n(no 'full' sampler in the grid -> skipping the fidelity "
+              "report; add full to --samplers for deltas and Kendall-tau)")
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        out = {"grid": result.to_json()}
+        if report is not None:
+            out["fidelity"] = report.to_json()
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"\nwrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,9 +7,18 @@ from repro.retrieval.encoder import (EncoderConfig, init_encoder,
 from repro.retrieval.exact import exact_topk
 from repro.retrieval.ivfflat import IVFFlatIndex, build_ivfflat, search_ivfflat
 from repro.retrieval.lsh import LSHIndex, build_lsh, search_lsh
-from repro.retrieval.metrics import precision_at_k
+from repro.retrieval.engines import (RetrievalEngine,
+                                     available_retrieval_engines,
+                                     chunked_search, get_retrieval_engine,
+                                     register_retrieval_engine)
+from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
+                                     qrel_dict, qrel_set, recall_at_k)
 
 __all__ = ["EncoderConfig", "init_encoder", "contrastive_loss",
            "embed_tokens", "exact_topk", "IVFFlatIndex", "build_ivfflat",
            "search_ivfflat", "LSHIndex", "build_lsh", "search_lsh",
-           "precision_at_k"]
+           "RetrievalEngine", "available_retrieval_engines",
+           "get_retrieval_engine", "register_retrieval_engine",
+           "chunked_search",
+           "precision_at_k", "recall_at_k", "ndcg_at_k", "mrr",
+           "qrel_set", "qrel_dict"]

@@ -2,9 +2,14 @@
 
 Pipeline per sample type (full corpus / uniform random / WindTunnel):
   1. restrict the corpus to the sampled entities,
-  2. index their embeddings (IVF-Flat, as the paper's pgvector ivfflat),
+  2. index their embeddings with any registered retrieval engine
+     (repro.eval.engines: exact / ivfflat / lsh / tfidf; the default
+     ivfflat is the paper's pgvector index),
   3. run the sample's associated queries through ANN top-k,
   4. report precision@3 against the QRels and the query density rho_q.
+
+For (sampler x engine x k x metric) grids with trie-shared stages and the
+sample-fidelity report, use repro.eval.runner.run_grid instead.
 
 The embedding model is trained once on (query, passage) pairs — sampling
 methods are compared on the SAME embedding geometry, as in the paper.
@@ -24,7 +29,7 @@ from repro.data.batching import TokenBatcher
 from repro.data.synthetic import SyntheticCorpus
 from repro.retrieval.encoder import (EncoderConfig, contrastive_loss,
                                      embed_corpus, init_encoder)
-from repro.retrieval.ivfflat import build_ivfflat, search_ivfflat
+from repro.retrieval.engines import chunked_search, get_retrieval_engine
 from repro.retrieval.metrics import precision_at_k, qrel_set
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -72,7 +77,8 @@ def evaluate_sample(name: str, corpus: SyntheticCorpus,
                     max_queries: int = 2048, seed: int = 0,
                     engine: str = "ivfflat",
                     query_chunk: int = 256) -> SearchResult:
-    """entity_mask None -> full corpus."""
+    """entity_mask None -> full corpus; ``engine`` names any registered
+    retrieval engine (n_lists/nprobe apply to ivfflat only)."""
     n_ent = corpus.num_entities
     mask = (np.ones(n_ent, bool) if entity_mask is None
             else np.asarray(entity_mask))
@@ -91,24 +97,12 @@ def evaluate_sample(name: str, corpus: SyntheticCorpus,
         qids = rng.choice(qids, max_queries, replace=False)
 
     sub_vecs = jnp.asarray(entity_vecs[kept_ids])
-    if engine == "ivfflat":
-        n_lists_eff = min(n_lists, max(1, kept_ids.size // 8))
-        index = build_ivfflat(jax.random.PRNGKey(seed), sub_vecs,
-                              n_lists=n_lists_eff)
-        search = lambda qv: search_ivfflat(index, qv, k=k,
-                                           nprobe=min(nprobe, n_lists_eff))[1]
-    else:
-        from repro.retrieval.exact import exact_topk
-        search = lambda qv: exact_topk(qv, sub_vecs, k=k, block=2048)[1]
-    # chunk queries: the probe gather is O(chunk * nprobe * cap * d)
-    chunks = []
-    qv_all = query_vecs[qids]
-    for i in range(0, qids.size, query_chunk):
-        blk = jnp.asarray(qv_all[i:i + query_chunk])
-        chunks.append(np.asarray(search(blk)))
-    local_ids = np.concatenate(chunks, axis=0) if chunks else \
-        np.zeros((0, k), np.int32)
-    global_ids = np.where(local_ids >= 0, kept_ids[np.clip(local_ids, 0, None)], -1)
+    eng = get_retrieval_engine(engine)
+    if engine == "ivfflat":  # honour the legacy tuning knobs
+        eng = dataclasses.replace(eng, n_lists=n_lists, nprobe=nprobe)
+    index = eng.build(jax.random.PRNGKey(seed), sub_vecs)
+    global_ids = chunked_search(eng, index, query_vecs[qids], kept_ids,
+                                k=k, query_chunk=query_chunk)
 
     pairs = qrel_set(q, e, v)
     p3 = precision_at_k(global_ids, qids, pairs, k=k)

@@ -1,0 +1,260 @@
+"""Eval subsystem tests: retrieval-engine registry round-trip, hand-computed
+nDCG/MRR/Kendall-τ, plan-trie shared-prefix execution counts, and the grid
+runner + fidelity report end-to-end on a tiny corpus."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import generate_corpus
+from repro.eval.engines import (available_retrieval_engines,
+                                get_retrieval_engine)
+from repro.eval.fidelity import (build_fidelity_report,
+                                 format_fidelity_report, kendall_tau)
+from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
+                              expand_grid)
+from repro.eval.runner import available_samplers, run_grid
+from repro.retrieval.metrics import mrr, ndcg_at_k
+
+
+# ---------------------------------------------------------------------------
+# metrics: hand-computed values
+# ---------------------------------------------------------------------------
+
+def test_ndcg_hand_computed():
+    # ranks: rel, miss, rel -> DCG = 1/log2(2) + 1/log2(4) = 1.5
+    # 3 judged docs, k=3 -> IDCG = 1 + 1/log2(3) + 1/log2(4)
+    retrieved = np.array([[10, 99, 11]])
+    by_q = {0: {10, 11, 12}}
+    idcg = 1.0 + 1.0 / np.log2(3.0) + 0.5
+    expect = 1.5 / idcg
+    assert abs(ndcg_at_k(retrieved, np.array([0]), by_q, k=3) - expect) < 1e-9
+
+
+def test_ndcg_perfect_ranking_is_one():
+    retrieved = np.array([[10, 11, 99]])
+    by_q = {0: {10, 11}}  # only 2 judged -> ideal = first 2 slots
+    assert abs(ndcg_at_k(retrieved, np.array([0]), by_q, k=3) - 1.0) < 1e-9
+
+
+def test_ndcg_ignores_padding_and_unjudged_queries():
+    retrieved = np.array([[10, -1, -1], [5, 6, 7]])
+    by_q = {0: {10}}  # query 1 has no judgments -> excluded from the mean
+    assert abs(ndcg_at_k(retrieved, np.array([0, 1]), by_q, k=3) - 1.0) < 1e-9
+
+
+def test_mrr_hand_computed():
+    # first relevant at rank 1 and rank 3 -> (1 + 1/3) / 2
+    retrieved = np.array([[10, 11, 12], [98, 99, 20]])
+    by_q = {0: {10}, 1: {20}}
+    assert abs(mrr(retrieved, np.array([0, 1]), by_q) - 2.0 / 3.0) < 1e-9
+
+
+def test_mrr_counts_misses_as_zero():
+    retrieved = np.array([[10, 11], [98, 99]])
+    by_q = {0: {10}, 1: {20}}
+    assert abs(mrr(retrieved, np.array([0, 1]), by_q, k=2) - 0.5) < 1e-9
+
+
+def test_kendall_tau_hand_computed():
+    assert kendall_tau([1, 2, 3, 4], [10, 20, 30, 40]) == pytest.approx(1.0)
+    assert kendall_tau([1, 2, 3, 4], [4, 3, 2, 1]) == pytest.approx(-1.0)
+    # pairs: (1,2) C, (1,3) C, (2,3) D -> (2 - 1) / 3
+    assert kendall_tau([1, 2, 3], [1, 3, 2]) == pytest.approx(1.0 / 3.0)
+    # tie in b on the (2,3) pair -> tau-b denominator sqrt(3 * 2)
+    assert kendall_tau([1, 2, 3], [1, 2, 2]) == pytest.approx(
+        2.0 / np.sqrt(6.0))
+
+
+# ---------------------------------------------------------------------------
+# retrieval-engine registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_four_engines():
+    assert set(available_retrieval_engines()) >= {"exact", "ivfflat", "lsh",
+                                                  "tfidf"}
+    with pytest.raises(ValueError, match="unknown retrieval engine"):
+        get_retrieval_engine("annoy")
+
+
+@pytest.fixture(scope="module")
+def engine_vectors():
+    key = jax.random.PRNGKey(0)
+    corpus = jax.random.normal(key, (600, 32))
+    corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
+    queries = corpus[:24] + 0.03 * jax.random.normal(jax.random.PRNGKey(1),
+                                                     (24, 32))
+    gt = np.argsort(-np.asarray(queries @ corpus.T), axis=1)[:, :5]
+    return corpus, queries, gt
+
+
+@pytest.mark.parametrize("name", ["exact", "ivfflat", "lsh", "tfidf"])
+def test_registry_round_trip(name, engine_vectors):
+    """build -> search through the protocol alone: valid ids, decent recall
+    of the exact top-5 (exact recovers it outright)."""
+    corpus, queries, gt = engine_vectors
+    eng = get_retrieval_engine(name)
+    index = eng.build(jax.random.PRNGKey(0), corpus)
+    ids = np.asarray(eng.search(index, queries, k=5))
+    assert ids.shape == (24, 5)
+    assert (ids >= 0).all() and (ids < corpus.shape[0]).all()
+    rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / 5
+                   for a, b in zip(ids, gt)])
+    assert rec > (0.99 if name == "exact" else 0.5)
+
+
+def test_lsh_engine_clamps_rerank_to_corpus():
+    eng = get_retrieval_engine("lsh")
+    assert eng.rerank > 10  # default would exceed this tiny corpus
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (10, 32))
+    index = eng.build(jax.random.PRNGKey(1), vecs)
+    ids = np.asarray(eng.search(index, vecs[:3], k=3))
+    assert ids.shape == (3, 3)
+    assert ids[np.arange(3), 0].tolist() == [0, 1, 2]  # self-retrieval
+
+
+def test_engine_hyperparams_are_replaceable():
+    eng = get_retrieval_engine("ivfflat")
+    tuned = dataclasses.replace(eng, n_lists=4, nprobe=2)
+    assert tuned.n_lists == 4 and eng.n_lists == 64  # registry untouched
+
+
+# ---------------------------------------------------------------------------
+# plan trie: shared prefixes execute exactly once
+# ---------------------------------------------------------------------------
+
+def test_trie_counts_pure():
+    """2 samplers x 2 engines x 2 ks x 1 metric walked through dummy stages:
+    executions follow the trie node count, requests the cell count."""
+    spec = GridSpec(samplers=("a", "b"), engines=("x", "y"), ks=(2, 3),
+                    metrics=("m",))
+    runs = expand_grid(spec)
+    assert len(runs) == 8
+    calls = []
+
+    def stage(label):
+        def fn(parent, run):
+            calls.append(label)
+            return (label, parent)
+        return fn
+
+    results, trie = execute_plan(runs, {
+        s: stage(s) for s in ("corpus", "embed", "sample", "index",
+                              "search", "metric")})
+    assert len(results) == 8
+    counts = trie.stage_counts()
+    assert counts["corpus"] == (1, 8)
+    assert counts["embed"] == (1, 8)
+    assert counts["sample"] == (2, 8)
+    assert counts["index"] == (4, 8)
+    assert counts["search"] == (8, 8)
+    assert counts["metric"] == (8, 8)
+    # the stage fns really ran only once per node
+    assert calls.count("corpus") == 1 and calls.count("embed") == 1
+    assert calls.count("sample") == 2 and calls.count("index") == 4
+
+
+def test_runspec_paths_share_prefixes():
+    a = RunSpec("s1", "e1", 3, "precision").path()
+    b = RunSpec("s1", "e1", 3, "mrr").path()
+    c = RunSpec("s1", "e2", 3, "precision").path()
+    assert a[:5] == b[:5]        # same up to search
+    assert a[:3] == c[:3]        # same up to sample
+    assert a[3] != c[3]          # diverge at index
+
+
+def test_trie_rerun_hits_cache():
+    trie = PlanTrie()
+    seen = []
+    for _ in range(3):
+        trie.run((("corpus",),), lambda: seen.append(1))
+    assert len(seen) == 1
+    node = trie.nodes[(("corpus",),)]
+    assert node.executions == 1 and node.requests == 3
+
+
+# ---------------------------------------------------------------------------
+# runner + fidelity report end-to-end on a tiny corpus
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_corpus():
+    return generate_corpus(num_queries=96, qrels_per_query=8, num_topics=8,
+                           aux_fraction=0.5, vocab_size=256, passage_len=32,
+                           query_len=8, seed=0, pad_multiple=64)
+
+
+def test_run_grid_counts_and_values(tiny_corpus):
+    spec = GridSpec(samplers=("full", "uniform"),
+                    engines=("exact", "tfidf"), ks=(2, 3),
+                    metrics=("precision",), sample_frac=0.4, max_queries=64)
+    res = run_grid(tiny_corpus, spec)
+    assert len(res.cells) == spec.num_cells == 8
+    assert all(0.0 <= v <= 1.0 for v in res.cells.values())
+    counts = res.trie.stage_counts()
+    assert counts["corpus"] == (1, 8) and counts["embed"] == (1, 8)
+    assert counts["sample"] == (2, 8) and counts["index"] == (4, 8)
+    assert counts["search"] == (8, 8) and counts["metric"] == (8, 8)
+    assert res.sampler_stats["full"]["n_entities"] == \
+        tiny_corpus.num_entities
+    assert 0 < res.sampler_stats["uniform"]["n_entities"] < \
+        tiny_corpus.num_primary
+
+
+def test_run_grid_windtunnel_sampler_and_fidelity(tiny_corpus):
+    assert set(available_samplers()) >= {"full", "uniform", "windtunnel"}
+    spec = GridSpec(samplers=("full", "uniform", "windtunnel"),
+                    engines=("exact", "tfidf"), ks=(3,),
+                    metrics=("precision", "mrr"), sample_frac=0.4,
+                    max_queries=64)
+    res = run_grid(tiny_corpus, spec)
+    report = build_fidelity_report(res.cells, spec)
+    for s in ("uniform", "windtunnel"):
+        for m in spec.metrics:
+            assert (s, m) in report.mean_abs_delta
+            assert -1.0 <= report.tau[(s, m)] <= 1.0
+            assert report.winners[(s, m)] in spec.engines
+    # deltas really are sampler-vs-full differences
+    key = ("uniform", "exact", 3, "precision")
+    assert report.cell_deltas[key] == pytest.approx(
+        res.cells[key] - res.cells[("full", "exact", 3, "precision")])
+    text = format_fidelity_report(report, spec)
+    assert "windtunnel" in text and "baseline winners" in text
+
+
+def test_fidelity_identical_cells_give_tau_one():
+    spec = GridSpec(samplers=("full", "s"), engines=("e1", "e2", "e3"),
+                    ks=(3,), metrics=("precision",))
+    cells = {}
+    for s in spec.samplers:
+        for i, e in enumerate(spec.engines):
+            cells[(s, e, 3, "precision")] = 0.1 * (i + 1)
+    report = build_fidelity_report(cells, spec)
+    assert report.tau[("s", "precision")] == pytest.approx(1.0)
+    assert report.mean_abs_delta[("s", "precision")] == pytest.approx(0.0)
+    assert report.winner_agreement[("s", "precision")]
+
+
+def test_fidelity_unknown_baseline_raises():
+    spec = GridSpec(samplers=("full",), engines=("exact",), ks=(3,),
+                    metrics=("precision",))
+    with pytest.raises(ValueError, match="baseline"):
+        build_fidelity_report({("full", "exact", 3, "precision"): 1.0},
+                              spec, baseline="nope")
+
+
+def test_evaluate_sample_uses_registry(tiny_corpus):
+    """Satellite: the legacy experiment path now accepts every registered
+    engine, including the new lsh/tfidf backends."""
+    from repro.eval.runner import tfidf_embedder
+    from repro.retrieval.experiment import evaluate_sample
+    ev, qv = tfidf_embedder(tiny_corpus)
+    for engine in ("exact", "ivfflat", "lsh", "tfidf"):
+        r = evaluate_sample(engine, tiny_corpus, ev, qv, None, seed=0,
+                            engine=engine, max_queries=48, query_chunk=32)
+        assert 0.0 <= r.p_at_3 <= 1.0
+        assert r.n_queries > 0
+    with pytest.raises(ValueError, match="unknown retrieval engine"):
+        evaluate_sample("bad", tiny_corpus, ev, qv, None, engine="faiss")
