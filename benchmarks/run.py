@@ -193,6 +193,36 @@ def bench_eval():
 
 
 # ---------------------------------------------------------------------------
+# Search core: engine x scoring backend x corpus size through SearchSession
+# (the hot path of DESIGN.md §9 — what both the grid and serving run)
+# ---------------------------------------------------------------------------
+
+def bench_retrieval():
+    from repro.retrieval.backends import available_backends
+    from repro.retrieval.engines import available_retrieval_engines
+    from repro.retrieval.search_core import SearchConfig, SearchSession
+
+    d, q_n, k = 64, 64, 10
+    sizes = (1024,) if SMOKE else (1024, 4096, 16384)
+    engines = (("exact", "lsh") if SMOKE
+               else available_retrieval_engines())
+    queries = jax.random.normal(jax.random.PRNGKey(1), (q_n, d))
+    for n in sizes:
+        vecs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        for engine in engines:
+            for backend in available_backends():
+                t0 = time.time()
+                session = SearchSession(
+                    vecs, SearchConfig(engine=engine, backend=backend),
+                    key=jax.random.PRNGKey(0))
+                jax.block_until_ready(session.index)
+                us_build = (time.time() - t0) * 1e6
+                us = _timeit(lambda: session.search(queries, k=k))
+                row(f"retrieval[{engine}|{backend}|N={n}]", us,
+                    f"build_us={us_build:.0f} Q={q_n} k={k}")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -224,18 +254,25 @@ BENCHES = {
     "table1": bench_table1_table2,
     "kernels": bench_kernels,
     "eval": bench_eval,
+    "retrieval": bench_retrieval,
     "roofline": bench_roofline,
 }
 
+SMOKE = False
+
 
 def main() -> None:
+    global SMOKE
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset of " + ",".join(BENCHES))
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced sweep (CI: smallest corpus, 2 engines)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="directory to persist each section's rows as "
                         "BENCH_<name>.json (the perf trajectory record)")
     args = p.parse_args()
+    SMOKE = args.smoke
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
     for n in names:

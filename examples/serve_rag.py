@@ -2,8 +2,14 @@
 decode through the continuous-batching engine (a miniature RAG stack over
 the paper's Fig. 5 online component).
 
+The retrieval hop routes through the search core's SearchSession — the same
+engine/backend/shard configuration the offline experiment grid benchmarks —
+via serve.RetrievalFrontend + serve.RagEngine.
+
   PYTHONPATH=src python examples/serve_rag.py
+  PYTHONPATH=src python examples/serve_rag.py --backend pallas
 """
+import argparse
 import os
 import sys
 
@@ -16,12 +22,19 @@ import numpy as np
 from repro.core import QRelTable, WindTunnelConfig, run_windtunnel
 from repro.data.synthetic import generate_corpus
 from repro.models.transformer import TransformerConfig, init_transformer
-from repro.retrieval.ivfflat import build_ivfflat, search_ivfflat
+from repro.retrieval.search_core import SearchConfig
 from repro.retrieval.tfidf import tfidf_vectors
-from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.engine import (RagEngine, RetrievalFrontend, ServeConfig,
+                                ServeEngine)
 
 
-def main():
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--engine", default="ivfflat")
+    p.add_argument("--backend", default="jnp",
+                   help="scoring backend (retrieval/backends.py)")
+    args = p.parse_args(argv)
+
     corpus = generate_corpus(num_queries=384, qrels_per_query=12,
                              num_topics=24, seed=0)
     # 1. sample the corpus with WindTunnel (cheap index, communities intact)
@@ -33,33 +46,39 @@ def main():
         num_entities=corpus.num_entities, config=cfg))(qrels)
     kept = np.nonzero(np.asarray(res.sample.entity_mask))[0]
     print(f"indexing {kept.size} of {corpus.num_entities} passages "
-          f"(WindTunnel sample)")
+          f"(WindTunnel sample, engine={args.engine}, "
+          f"backend={args.backend})")
 
-    # 2. index the sample
+    # 2. index the sample through the search core (build-once session);
+    #    queries embed with the document df so both sides share geometry
     vecs, df = tfidf_vectors(corpus.passage_tokens[kept], corpus.vocab_size)
-    index = build_ivfflat(jax.random.PRNGKey(0), jnp.asarray(vecs),
-                          n_lists=16)
+    embed = lambda toks: tfidf_vectors(np.asarray(toks), corpus.vocab_size,
+                                       df)[0]
+    frontend = RetrievalFrontend(
+        vecs, embed,
+        config=SearchConfig(engine=args.engine, backend=args.backend,
+                            engine_opts={"n_lists": 16}
+                            if args.engine == "ivfflat" else None),
+        key=jax.random.PRNGKey(0), ids_map=kept)
 
-    # 3. retrieve for a few queries
-    qv, _ = tfidf_vectors(corpus.query_tokens[:4], corpus.vocab_size, df)
-    _, ids = search_ivfflat(index, jnp.asarray(qv), k=3, nprobe=8)
-    ids = np.asarray(ids)
-
-    # 4. generate with retrieved context through the batched engine
+    # 3. generate with retrieved context through the batched engine
     mcfg = TransformerConfig(vocab_size=corpus.vocab_size, d_model=64,
                              n_layers=2, n_heads=4, n_kv_heads=2, d_ff=128,
                              dtype=jnp.float32)
     params = init_transformer(jax.random.PRNGKey(1), mcfg)
-    engine = ServeEngine(params, mcfg, ServeConfig(max_batch=4, max_seq=128,
-                                                   max_new_tokens=8))
+    serve = ServeEngine(params, mcfg, ServeConfig(max_batch=4, max_seq=128,
+                                                  max_new_tokens=8))
+    rag = RagEngine(frontend, serve,
+                    lambda gid: corpus.passage_tokens[gid], ctx_tokens=24)
+    retrieved = []
     for qi in range(4):
-        ctx = corpus.passage_tokens[kept[ids[qi, 0]]][:24]
-        prompt = np.concatenate([corpus.query_tokens[qi], ctx])
-        engine.submit(prompt.astype(np.int32))
-    engine.drain()
+        _, ids = rag.submit_query(corpus.query_tokens[qi],
+                                  corpus.query_tokens[qi], k=3)
+        retrieved.append(ids)
+    serve.drain()
     print("4 RAG requests served through continuous batching; retrieved ids:")
     for qi in range(4):
-        print(f"  query {qi}: passages {kept[ids[qi]].tolist()}")
+        print(f"  query {qi}: passages {retrieved[qi].tolist()}")
 
 
 if __name__ == "__main__":

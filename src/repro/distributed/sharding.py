@@ -67,6 +67,13 @@ GNN_RULES = {
     "batch": ("pod", "data"),
 }
 
+RETRIEVAL_RULES = {
+    "corpus": ("data", "model"),  # corpus vectors / LSH codes, row-sharded
+    "lists": ("data", "model"),   # ivfflat inverted lists, list-sharded
+    "queries": None,              # query batches replicate (small, chunked)
+    "feat": None,
+}
+
 
 def _mesh_axes_for(mesh: Mesh, axis):
     """Filter rule target axes to those present in the mesh (so the same

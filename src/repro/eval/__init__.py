@@ -18,6 +18,8 @@ package turns that claim into a measurable artifact:
 """
 from repro.eval.engines import (RetrievalEngine, available_retrieval_engines,
                                 get_retrieval_engine, register_retrieval_engine)
+from repro.retrieval.backends import available_backends, get_backend
+from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.eval.fidelity import (FidelityReport, build_fidelity_report,
                                  format_fidelity_report, kendall_tau)
 from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
@@ -28,6 +30,7 @@ from repro.eval.runner import (GridResult, available_samplers, run_grid,
 __all__ = [
     "RetrievalEngine", "available_retrieval_engines", "get_retrieval_engine",
     "register_retrieval_engine",
+    "available_backends", "get_backend", "SearchConfig", "SearchSession",
     "GridSpec", "RunSpec", "PlanTrie", "expand_grid", "execute_plan",
     "GridResult", "run_grid", "tfidf_embedder", "available_samplers",
     "FidelityReport", "build_fidelity_report", "format_fidelity_report",

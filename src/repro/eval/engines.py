@@ -7,11 +7,11 @@ registered ``exact`` / ``ivfflat`` / ``lsh`` / ``tfidf`` engines.
 from repro.retrieval.engines import (ExactEngine, IVFFlatEngine, LSHEngine,
                                      RetrievalEngine, TfIdfEngine,
                                      TfIdfIndex, available_retrieval_engines,
-                                     chunked_search, get_retrieval_engine,
+                                     get_retrieval_engine,
                                      register_retrieval_engine)
 
 __all__ = [
     "RetrievalEngine", "available_retrieval_engines",
-    "get_retrieval_engine", "register_retrieval_engine", "chunked_search",
+    "get_retrieval_engine", "register_retrieval_engine",
     "ExactEngine", "IVFFlatEngine", "LSHEngine", "TfIdfEngine", "TfIdfIndex",
 ]

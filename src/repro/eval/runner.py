@@ -10,12 +10,18 @@
   sample  — entity mask from the sampler registry (full / uniform /
             windtunnel), associated queries and query density, once per
             sampler.
-  index   — ``RetrievalEngine.build`` over the sample's kept vectors, once
-            per (sampler, engine).
-  search  — chunked ``RetrievalEngine.search`` mapped back to global entity
+  index   — a :class:`~repro.retrieval.search_core.SearchSession` over the
+            sample's kept vectors, once per (sampler, engine): build-once
+            through the search-core front door, so the grid exercises the
+            same engine/backend/shard path the serving engine uses.
+  search  — chunked ``SearchSession.search`` mapped back to global entity
             ids, once per (sampler, engine, k) — the built index is reused
             across k values and metrics.
   metric  — scalar from the metric registry, per cell.
+
+``run_grid(..., search=SearchConfig(backend="pallas", sharded=True,
+mesh=...))`` re-runs the whole grid on the kernel backend or a device mesh
+without touching any stage code.
 
 Samplers and metrics are registries too, so new sampling baselines or IR
 measures extend the grid without touching this walker.
@@ -32,9 +38,9 @@ import numpy as np
 from repro.core import (QRelTable, WindTunnelConfig, query_density,
                         run_windtunnel)
 from repro.data.synthetic import SyntheticCorpus
-from repro.eval.engines import chunked_search, get_retrieval_engine
 from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
                               expand_grid)
+from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
                                      qrel_dict, qrel_set, recall_at_k)
 from repro.retrieval.tfidf import tfidf_vectors
@@ -159,9 +165,15 @@ class GridResult:
 
 def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
              embedder: Optional[Callable] = None, query_chunk: int = 256,
+             search: Optional[SearchConfig] = None,
              verbose: bool = False) -> GridResult:
-    """Execute every cell of ``spec`` over ``corpus`` via the plan trie."""
+    """Execute every cell of ``spec`` over ``corpus`` via the plan trie.
+
+    ``search`` configures the search core (backend / sharded / mesh) for
+    the index+search stages; the engine axis always comes from the grid.
+    """
     embedder = embedder or tfidf_embedder
+    search = search or SearchConfig()
     sampler_stats: Dict[str, Dict[str, float]] = {}
 
     def stage_corpus(parent: Any, run: RunSpec) -> dict:
@@ -202,15 +214,15 @@ def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
         return {**ctx, "kept_ids": kept_ids, "qids": qids}
 
     def stage_index(ctx: dict, run: RunSpec) -> dict:
-        engine = get_retrieval_engine(run.engine)
-        sub_vecs = jnp.asarray(ctx["ev"][ctx["kept_ids"]])
-        index = engine.build(jax.random.PRNGKey(spec.seed), sub_vecs)
-        return {**ctx, "engine": engine, "index": index}
+        cfg = dataclasses.replace(search, engine=run.engine,
+                                  query_chunk=query_chunk)
+        session = SearchSession(ctx["ev"][ctx["kept_ids"]], cfg,
+                                key=jax.random.PRNGKey(spec.seed),
+                                ids_map=ctx["kept_ids"])
+        return {**ctx, "session": session}
 
     def stage_search(ctx: dict, run: RunSpec) -> dict:
-        global_ids = chunked_search(
-            ctx["engine"], ctx["index"], ctx["qv"][ctx["qids"]],
-            ctx["kept_ids"], k=run.k, query_chunk=query_chunk)
+        global_ids = ctx["session"].search(ctx["qv"][ctx["qids"]], k=run.k)
         return {**ctx, "global_ids": global_ids}
 
     def stage_metric(ctx: dict, run: RunSpec) -> float:

@@ -1,8 +1,9 @@
 """Dispatch wrapper for lsh_hamming (pad + interpret off-TPU).
 
 Padding note: padded corpus rows get code 0; a real query could tie with
-them, so padded ids are masked to -1 / -inf after the merge and padded rows
-are given all-ones codes (max distance) to keep them out of the top-k.
+them, so the kernel masks by true row count (``n_valid``) and padded ids
+come back as −1 / −inf.  ``k`` is clamped to the corpus size and the result
+padded back, so engine-path shapes never crash ``lax.top_k``.
 """
 from __future__ import annotations
 
@@ -13,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels.lsh_hamming.lsh_hamming import hamming_topk_pallas
 from repro.kernels.lsh_hamming.ref import hamming_topk_ref
+from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
 
 
 def _on_tpu() -> bool:
@@ -24,20 +26,21 @@ def _on_tpu() -> bool:
 def hamming_topk(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *, k: int,
                  block_q: int = 128, block_n: int = 1024,
                  use_kernel: bool = True):
-    if not use_kernel or k > 32:
-        return hamming_topk_ref(q_codes, c_codes, k=k)
-    qn, w = q_codes.shape
     n = c_codes.shape[0]
+    k_eff = min(k, n)
+    if not use_kernel or k_eff > 32:
+        return _pad_topk(*hamming_topk_ref(q_codes, c_codes, k=k_eff), k)
+    qn, w = q_codes.shape
     bq = min(block_q, max(8, qn))
     bn = min(block_n, max(128, n))
     pad_q = (-qn) % bq
     pad_n = (-n) % bn
     qp = jnp.pad(q_codes, ((0, pad_q), (0, 0)))
     cp = jnp.pad(c_codes, ((0, pad_n), (0, 0)))
-    s, i = hamming_topk_pallas(qp, cp, k=k, block_q=bq, block_n=bn,
+    s, i = hamming_topk_pallas(qp, cp, k=k_eff, block_q=bq, block_n=bn,
                                interpret=not _on_tpu(), n_valid=n)
     if pad_n:
         bad = i >= n
         s = jnp.where(bad, -jnp.inf, s)
         i = jnp.where(bad, -1, i)
-    return s[:qn], i[:qn]
+    return _pad_topk(s[:qn], i[:qn], k)

@@ -1,6 +1,12 @@
-"""jit'd dispatch wrapper for topk_scoring: pads to block multiples, selects
-interpret mode off-TPU, falls back to the jnp oracle for k > 32 (the
-repeated-max extraction stops paying for itself)."""
+"""jit'd dispatch wrappers for topk_scoring: pad to block multiples, select
+interpret mode off-TPU, fall back to the jnp oracle for k > 32 (the
+repeated-max extraction stops paying for itself).
+
+Shape contract (the engine path depends on it): any Q/N/C/k combination is
+accepted — k is clamped to the candidate count, inputs are padded to block
+multiples, and missing results come back as score −inf / id −1, so callers
+never see a ``lax.top_k`` shape error from an undersized corpus.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,7 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.topk_scoring import ref
-from repro.kernels.topk_scoring.topk_scoring import topk_scores_pallas
+from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
+from repro.kernels.topk_scoring.topk_scoring import (gathered_topk_pallas,
+                                                     topk_scores_pallas)
 
 _MAX_KERNEL_K = 32
 
@@ -24,10 +32,11 @@ def topk_scores(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
                 block_q: int = 128, block_n: int = 1024,
                 use_kernel: bool = True):
     """Top-k inner-product search: (Q, D) x (N, D) -> (Q, k) scores/ids."""
-    if not use_kernel or k > _MAX_KERNEL_K:
-        return ref.topk_scores_ref(queries, corpus, k=k)
-    qn, d = queries.shape
     n = corpus.shape[0]
+    k_eff = min(k, n)
+    if not use_kernel or k_eff > _MAX_KERNEL_K:
+        return _pad_topk(*ref.topk_scores_ref(queries, corpus, k=k_eff), k)
+    qn, d = queries.shape
     bq = min(block_q, max(8, qn))
     bn = min(block_n, max(128, n))
     pad_q = (-qn) % bq
@@ -40,10 +49,38 @@ def topk_scores(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
     cp = jnp.pad(corpus.astype(jnp.float32), ((0, pad_n), (0, 1)))
     if pad_n:
         cp = cp.at[n:, d].set(-1e30)
-    s, i = topk_scores_pallas(qp, cp, k=k, block_q=bq, block_n=bn,
+    s, i = topk_scores_pallas(qp, cp, k=k_eff, block_q=bq, block_n=bn,
                               interpret=not _on_tpu())
     if pad_n:
         bad = i >= n
         s = jnp.where(bad, -jnp.inf, s)
         i = jnp.where(bad, -1, i)
-    return s[:qn], i[:qn]
+    return _pad_topk(s[:qn], i[:qn], k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_c",
+                                             "use_kernel"))
+def gathered_topk(queries: jnp.ndarray, cand_vecs: jnp.ndarray,
+                  cand_ids: jnp.ndarray, *, k: int, block_q: int = 8,
+                  block_c: int = 256, use_kernel: bool = True):
+    """Per-query candidate top-k (the ivfflat probe-scoring step):
+    queries (Q, D), cand_vecs (Q, C, D), cand_ids (Q, C) with −1 marking
+    invalid slots -> (scores (Q, k), ids (Q, k)), −inf/−1 for misses."""
+    qn, d = queries.shape
+    c = cand_vecs.shape[1]
+    k_eff = min(k, c)
+    if not use_kernel or k_eff > _MAX_KERNEL_K:
+        return _pad_topk(
+            *ref.gathered_topk_ref(queries, cand_vecs, cand_ids, k=k_eff), k)
+    bq = min(block_q, max(1, qn))
+    bc = min(block_c, max(128, c))
+    pad_q = (-qn) % bq
+    pad_c = (-c) % bc
+    qp = jnp.pad(queries.astype(jnp.float32), ((0, pad_q), (0, 0)))
+    cp = jnp.pad(cand_vecs.astype(jnp.float32),
+                 ((0, pad_q), (0, pad_c), (0, 0)))
+    ip = jnp.pad(cand_ids.astype(jnp.int32), ((0, pad_q), (0, pad_c)),
+                 constant_values=-1)
+    s, i = gathered_topk_pallas(qp, cp, ip, k=k_eff, block_q=bq, block_c=bc,
+                                interpret=not _on_tpu())
+    return _pad_topk(s[:qn], i[:qn], k)

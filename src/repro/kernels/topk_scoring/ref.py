@@ -5,7 +5,32 @@ import jax.numpy as jnp
 from jax import lax
 
 
+def pad_topk(s: jnp.ndarray, i: jnp.ndarray, k: int):
+    """Pad (Q, k_eff) top-k results back to (Q, k) with the miss
+    convention every scoring path shares: score −inf, id −1.  The single
+    definition of that convention — kernel dispatch wrappers, the backend
+    registry and the sharded merge all import it."""
+    k_eff = s.shape[1]
+    if k_eff >= k:
+        return s, i
+    return (jnp.pad(s, ((0, 0), (0, k - k_eff)),
+                    constant_values=-jnp.inf),
+            jnp.pad(i, ((0, 0), (0, k - k_eff)), constant_values=-1))
+
+
 def topk_scores_ref(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int):
     scores = (queries @ corpus.T).astype(jnp.float32)
     top_s, top_i = lax.top_k(scores, k)
     return top_s, top_i.astype(jnp.int32)
+
+
+def gathered_topk_ref(queries: jnp.ndarray, cand_vecs: jnp.ndarray,
+                      cand_ids: jnp.ndarray, *, k: int):
+    """Per-query candidate sets: queries (Q, D), cand_vecs (Q, C, D),
+    cand_ids (Q, C) with −1 marking invalid slots -> top-k (scores, ids),
+    invalid slots scored −inf and returned as id −1."""
+    s = jnp.einsum("qd,qcd->qc", queries, cand_vecs).astype(jnp.float32)
+    s = jnp.where(cand_ids >= 0, s, -jnp.inf)
+    top_s, pos = lax.top_k(s, k)
+    top_i = jnp.take_along_axis(cand_ids, pos, axis=1).astype(jnp.int32)
+    return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)

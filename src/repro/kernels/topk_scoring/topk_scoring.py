@@ -46,6 +46,76 @@ def _topk_kernel(q_ref, c_ref, s_out_ref, i_out_ref, *, k: int, block_n: int):
     i_out_ref[...] = out_i
 
 
+def _gathered_kernel(q_ref, c_ref, i_ref, s_out_ref, i_out_ref, *, k: int):
+    """Per-query candidate scoring: each query row scores ITS OWN candidate
+    block (the ivfflat probe gather), so the dot is a batched row-wise
+    reduction on the VPU rather than an MXU matmul; the running top-k is the
+    same k-round max/mask extraction as _topk_kernel."""
+    q = q_ref[...]                              # (bq, d)
+    c = c_ref[...]                              # (bq, bc, d)
+    ids = i_ref[...]                            # (bq, bc) int32, -1 invalid
+    scores = jnp.sum(q[:, None, :] * c, axis=-1,
+                     dtype=jnp.float32)         # (bq, bc)
+    scores = jnp.where(ids >= 0, scores, -jnp.inf)
+
+    def body(i, carry):
+        scores, out_s, out_i = carry
+        m = jnp.max(scores, axis=1)
+        arg = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        col = lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+        hit = col == arg[:, None]
+        # id extraction without a dynamic gather: mask-select the argmax col
+        idv = jnp.sum(jnp.where(hit, ids, 0), axis=1)
+        idv = jnp.where(jnp.isfinite(m), idv, -1)
+        out_s = lax.dynamic_update_slice(out_s, m[:, None], (0, i))
+        out_i = lax.dynamic_update_slice(out_i, idv[:, None], (0, i))
+        return jnp.where(hit, -jnp.inf, scores), out_s, out_i
+
+    out_s = jnp.full((q.shape[0], k), -jnp.inf, jnp.float32)
+    out_i = jnp.full((q.shape[0], k), -1, jnp.int32)
+    _, out_s, out_i = lax.fori_loop(0, k, body, (scores, out_s, out_i))
+    s_out_ref[...] = out_s
+    i_out_ref[...] = out_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "block_c", "interpret"))
+def gathered_topk_pallas(queries: jnp.ndarray, cand_vecs: jnp.ndarray,
+                         cand_ids: jnp.ndarray, *, k: int, block_q: int = 8,
+                         block_c: int = 256, interpret: bool = False):
+    """queries (Q, D) f32, cand_vecs (Q, C, D) f32, cand_ids (Q, C) i32
+    (−1 = invalid slot) -> (scores (Q, k), ids (Q, k)).
+
+    Q must be a multiple of block_q and C of block_c (ops.py pads).
+    """
+    qn, d = queries.shape
+    c = cand_vecs.shape[1]
+    nq, nc = qn // block_q, c // block_c
+
+    partial_s, partial_i = pl.pallas_call(
+        functools.partial(_gathered_kernel, k=k),
+        grid=(nq, nc),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, block_c, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_q, block_c), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, nc * k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, nc * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, cand_vecs, cand_ids)
+
+    top_s, pos = lax.top_k(partial_s, k)
+    top_i = jnp.take_along_axis(partial_i, pos, axis=1)
+    return top_s, jnp.where(jnp.isfinite(top_s), top_i, -1)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("k", "block_q", "block_n", "interpret"))
 def topk_scores_pallas(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,

@@ -5,6 +5,7 @@ through the trie-shared plan executor and prints the sample-fidelity report.
   PYTHONPATH=src python -m repro.launch.evaluate --grid default
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --json results/eval.json
   PYTHONPATH=src python -m repro.launch.evaluate --engines exact,lsh --ks 3,10,20
+  PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --backend pallas --sharded --mesh host
 """
 from __future__ import annotations
 
@@ -14,9 +15,11 @@ import json
 import os
 
 from repro.data.synthetic import generate_corpus
-from repro.eval import (GridSpec, available_retrieval_engines,
-                        available_samplers, build_fidelity_report,
-                        format_fidelity_report, run_grid)
+from repro.eval import (GridSpec, SearchConfig, available_backends,
+                        available_retrieval_engines, available_samplers,
+                        build_fidelity_report, format_fidelity_report,
+                        get_backend, get_retrieval_engine, run_grid)
+from repro.launch.mesh import parse_mesh
 
 GRIDS = {
     # 3 samplers x 4 engines x 2 ks x 4 metrics = 96 cells
@@ -43,6 +46,16 @@ def main(argv=None):
     p.add_argument("--ks", default=None, help="comma list of cutoffs")
     p.add_argument("--metrics", default=None,
                    help="comma list of precision,recall,ndcg,mrr")
+    p.add_argument("--backend", default="jnp",
+                   help="scoring backend for the search core "
+                        "(retrieval/backends.py): "
+                        + ",".join(available_backends()))
+    p.add_argument("--sharded", action="store_true",
+                   help="run index search mesh-partitioned through "
+                        "retrieval/sharded.py")
+    p.add_argument("--mesh", default="host",
+                   help="mesh for --sharded: host (1-device, production "
+                        "axis names) or auto (all local devices)")
     p.add_argument("--sample-frac", type=float, default=None)
     p.add_argument("--max-queries", type=int, default=None)
     p.add_argument("--queries", type=int, default=512,
@@ -73,6 +86,15 @@ def main(argv=None):
     overrides["seed"] = args.seed
     spec = dataclasses.replace(spec, **overrides)
 
+    # unknown engine/backend names fail here with the registry's error
+    # message (the core/engines.py UX), before any corpus work
+    for name in spec.engines:
+        get_retrieval_engine(name)
+    get_backend(args.backend)
+    search = SearchConfig(backend=args.backend, sharded=args.sharded,
+                          mesh=parse_mesh(args.mesh) if args.sharded
+                          else None)
+
     corpus = generate_corpus(
         num_queries=args.queries, qrels_per_query=args.qrels_per_query,
         num_topics=args.topics, aux_fraction=args.aux_fraction,
@@ -81,9 +103,10 @@ def main(argv=None):
           f"({corpus.num_primary} judged), {corpus.num_queries} queries")
     print(f"grid: {len(spec.samplers)} samplers x {len(spec.engines)} "
           f"engines x {len(spec.ks)} ks x {len(spec.metrics)} metrics "
-          f"= {spec.num_cells} cells")
+          f"= {spec.num_cells} cells "
+          f"(backend={args.backend}, sharded={args.sharded})")
 
-    result = run_grid(corpus, spec, verbose=True)
+    result = run_grid(corpus, spec, search=search, verbose=True)
 
     print("\ncells (sampler, engine, k, metric -> value):")
     for (s, e, k, m), v in sorted(result.cells.items()):

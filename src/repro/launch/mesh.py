@@ -32,3 +32,15 @@ def make_host_mesh(model_axis: int = 1):
 def batch_axes(mesh) -> tuple:
     """Mesh axes the global batch is sharded over."""
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def parse_mesh(name: str):
+    """CLI ``--mesh`` flag -> Mesh: ``host`` is the 1-device mesh with
+    production axis names, ``auto`` puts all local devices on the data
+    axis.  Shared by launch/sample.py and launch/evaluate.py so the two
+    entry points agree on mesh vocabulary."""
+    if name == "host":
+        return make_host_mesh()
+    if name == "auto":
+        return jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+    raise ValueError(f"unknown mesh {name!r}; known meshes: auto, host")

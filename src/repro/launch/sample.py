@@ -19,16 +19,9 @@ import numpy as np
 
 from repro.core import (QRelTable, WindTunnelConfig, available_engines,
                         fit_em, run_windtunnel, run_windtunnel_sharded)
+from repro.core.engines import get_engine
 from repro.data.synthetic import generate_corpus
-from repro.launch.mesh import make_host_mesh
-
-
-def _make_mesh(name: str):
-    """--mesh flag: 'host' = 1-device mesh with production axis names;
-    'auto' = all local devices on the 'data' axis."""
-    if name == "host":
-        return make_host_mesh()
-    return jax.make_mesh((len(jax.devices()), 1), ("data", "model"))
+from repro.launch.mesh import parse_mesh
 
 
 def main(argv=None):
@@ -42,9 +35,8 @@ def main(argv=None):
     p.add_argument("--fanout", type=int, default=16)
     p.add_argument("--lp-rounds", type=int, default=5)
     p.add_argument("--engine", default="sort",
-                   choices=list(available_engines()),
                    help="label-prop engine from the registry "
-                        "(core/engines.py)")
+                        "(core/engines.py): " + ",".join(available_engines()))
     p.add_argument("--sharded", action="store_true",
                    help="run the mesh-partitioned pipeline "
                         "(core/sharded_pipeline.py; requires an ELL-family "
@@ -55,6 +47,8 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args(argv)
+    get_engine(args.engine)        # unknown names fail with the registry's
+                                   # error message before any corpus work
     if args.sharded and args.engine == "sort":
         p.error("--sharded requires an ELL-family engine; "
                 "pass --engine ell or --engine pallas")
@@ -72,7 +66,7 @@ def main(argv=None):
         lp_rounds=args.lp_rounds, engine=args.engine,
         target_size=args.target_frac * corpus.num_primary, seed=args.seed)
     if args.sharded:
-        mesh = _make_mesh(args.mesh)
+        mesh = parse_mesh(args.mesh)
         print(f"sharded pipeline on mesh {dict(mesh.shape)} "
               f"(engine={cfg.engine})")
         res = run_windtunnel_sharded(

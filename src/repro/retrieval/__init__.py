@@ -1,24 +1,33 @@
-"""Retrieval substrate — the paper's Fig. 5 semantic-search pipeline:
-embedding model -> vector index (IVF-Flat like pgvector's ivfflat, or
-sign-LSH) -> ANN top-k -> precision@k / query-density evaluation.
+"""Retrieval substrate — the paper's Fig. 5 semantic-search pipeline as a
+three-layer search core (DESIGN.md §9): scoring backends (jnp / pallas
+kernels) under pluggable vector indexes (exact / ivfflat / lsh / tfidf),
+mesh-sharded search, and the :class:`SearchSession` front door shared by
+offline evaluation and online serving.
 """
 from repro.retrieval.encoder import (EncoderConfig, init_encoder,
                                      contrastive_loss, embed_tokens)
+from repro.retrieval.backends import (ScoringBackend, available_backends,
+                                      get_backend, register_backend)
 from repro.retrieval.exact import exact_topk
 from repro.retrieval.ivfflat import IVFFlatIndex, build_ivfflat, search_ivfflat
 from repro.retrieval.lsh import LSHIndex, build_lsh, search_lsh
 from repro.retrieval.engines import (RetrievalEngine,
                                      available_retrieval_engines,
-                                     chunked_search, get_retrieval_engine,
+                                     get_retrieval_engine,
                                      register_retrieval_engine)
+from repro.retrieval.sharded import sharded_search
+from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
                                      qrel_dict, qrel_set, recall_at_k)
 
 __all__ = ["EncoderConfig", "init_encoder", "contrastive_loss",
-           "embed_tokens", "exact_topk", "IVFFlatIndex", "build_ivfflat",
+           "embed_tokens",
+           "ScoringBackend", "available_backends", "get_backend",
+           "register_backend",
+           "exact_topk", "IVFFlatIndex", "build_ivfflat",
            "search_ivfflat", "LSHIndex", "build_lsh", "search_lsh",
            "RetrievalEngine", "available_retrieval_engines",
            "get_retrieval_engine", "register_retrieval_engine",
-           "chunked_search",
+           "sharded_search", "SearchConfig", "SearchSession",
            "precision_at_k", "recall_at_k", "ndcg_at_k", "mrr",
            "qrel_set", "qrel_dict"]

@@ -1,0 +1,178 @@
+"""Scoring-backend registry — Layer 1 of the search core (DESIGN.md §9).
+
+Every retrieval engine bottoms out in one of three scoring primitives:
+
+  * ``topk``          — dense inner-product top-k against a shared corpus
+                        (exact / tfidf search, lsh rerank oracle);
+  * ``hamming_topk``  — packed sign-code Hamming top-k (the lsh scan);
+  * ``gathered_topk`` — per-query candidate-set top-k (the ivfflat probe
+                        scoring, where each query scores its own gathered
+                        lists).
+
+A backend is a registered implementation of all three behind one protocol —
+the same pluggable-component pattern as ``core/engines.py`` — so the choice
+of execution strategy (pure-XLA jnp vs the Pallas kernels) is a config
+string on any engine rather than a fork in each index.  Registered:
+
+  * ``jnp``    — pure-jnp reference: blocked streaming top-k for the dense
+                 scan (the (Q, N) score matrix is never materialised),
+                 the kernel oracles for Hamming and gathered scoring.
+  * ``pallas`` — the fused Pallas kernels (kernels/topk_scoring,
+                 kernels/lsh_hamming); interpret mode off-TPU, so the
+                 backend is selectable everywhere.
+
+Tie policy (both backends, verified by tests/test_search_core.py): results
+are score-descending; equal scores break toward the FIRST candidate in the
+input layout (``lax.top_k`` takes the first occurrence, and the kernels'
+per-block extraction + ascending-block merge preserve the same order).
+For ``topk`` and ``hamming_topk`` the layout is id-ascending, so ties
+break toward the lower candidate id; for ``gathered_topk`` the layout is
+the caller's candidate order (for ivfflat: probe rank × slot), so ties
+break by candidate *position*, not id.  Misses — k larger than the
+candidate count, or invalid slots — come back as score −inf / id −1.
+
+Backends are frozen dataclasses so callers can tune block sizes with
+``dataclasses.replace`` without mutating the registry's shared instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels.lsh_hamming import ops as lsh_ops
+from repro.kernels.lsh_hamming.ref import hamming_topk_ref
+from repro.kernels.topk_scoring import ops as topk_ops
+from repro.kernels.topk_scoring.ref import gathered_topk_ref
+from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
+
+
+@runtime_checkable
+class ScoringBackend(Protocol):
+    """Execution strategy for the three scoring primitives."""
+
+    name: str
+
+    def topk(self, queries: jnp.ndarray, corpus: jnp.ndarray, *,
+             k: int):
+        """(Q, D) x (N, D) -> (scores f32[Q, k], ids i32[Q, k])."""
+        ...
+
+    def hamming_topk(self, q_codes: jnp.ndarray, c_codes: jnp.ndarray, *,
+                     k: int):
+        """Packed codes (Q, W) x (N, W) -> (−distance f32[Q, k], ids)."""
+        ...
+
+    def gathered_topk(self, queries: jnp.ndarray, cand_vecs: jnp.ndarray,
+                      cand_ids: jnp.ndarray, *, k: int):
+        """(Q, D) x (Q, C, D) with ids (Q, C), −1 = invalid slot."""
+        ...
+
+
+_REGISTRY: Dict[str, ScoringBackend] = {}
+
+
+def register_backend(cls):
+    """Class decorator: instantiate and register a backend under its name."""
+    backend = cls()
+    _REGISTRY[backend.name] = backend
+    return cls
+
+
+def get_backend(name: str) -> ScoringBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scoring backend {name!r}; registered backends: "
+            f"{', '.join(available_backends())}") from None
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block"))
+def _blocked_topk(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
+                  block: int = 4096):
+    """Streaming blocked top-k: candidates scored block-by-block with a
+    running merge, so the (Q, N) score matrix never materialises — the same
+    structure the Pallas topk_scoring kernel implements in VMEM.  Handles
+    k > N natively (the −inf/−1 init survives into the output)."""
+    qn, d = queries.shape
+    n = corpus.shape[0]
+    nb = (n + block - 1) // block
+    pad = nb * block - n
+    cp = jnp.pad(corpus, ((0, pad), (0, 0)))
+    blocks = cp.reshape(nb, block, d)
+
+    def step(carry, xs):
+        best_s, best_i = carry
+        blk, bi = xs
+        s = (queries @ blk.T).astype(jnp.float32)             # (Q, block)
+        ids = bi * block + jnp.arange(block, dtype=jnp.int32)[None]
+        valid = ids < n
+        s = jnp.where(valid, s, -jnp.inf)
+        cat_s = jnp.concatenate([best_s, s], axis=1)
+        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)], 1)
+        top_s, pos = lax.top_k(cat_s, k)
+        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
+        return (top_s, top_i), None
+
+    init = (jnp.full((qn, k), -jnp.inf, jnp.float32),
+            jnp.full((qn, k), -1, jnp.int32))
+    (scores, ids), _ = lax.scan(
+        step, init, (blocks, jnp.arange(nb, dtype=jnp.int32)))
+    return scores, ids
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class JnpBackend:
+    """Pure-XLA reference backend (the oracle the pallas backend is tested
+    against)."""
+
+    block: int = 4096
+    name: str = "jnp"
+
+    def topk(self, queries, corpus, *, k: int):
+        return _blocked_topk(queries, corpus, k=k, block=self.block)
+
+    def hamming_topk(self, q_codes, c_codes, *, k: int):
+        k_eff = min(k, c_codes.shape[0])
+        return _pad_topk(*hamming_topk_ref(q_codes, c_codes, k=k_eff), k)
+
+    def gathered_topk(self, queries, cand_vecs, cand_ids, *, k: int):
+        k_eff = min(k, cand_ids.shape[1])
+        return _pad_topk(
+            *gathered_topk_ref(queries, cand_vecs, cand_ids, k=k_eff), k)
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class PallasBackend:
+    """Fused Pallas kernels (interpret mode off-TPU); the dispatch wrappers
+    in kernels/*/ops.py own padding, k-clamping and the k > 32 fallback."""
+
+    block_q: int = 128
+    block_n: int = 1024
+    block_c: int = 256
+    name: str = "pallas"
+
+    def topk(self, queries, corpus, *, k: int):
+        return topk_ops.topk_scores(queries, corpus, k=k,
+                                    block_q=self.block_q,
+                                    block_n=self.block_n)
+
+    def hamming_topk(self, q_codes, c_codes, *, k: int):
+        return lsh_ops.hamming_topk(q_codes, c_codes, k=k,
+                                    block_q=self.block_q,
+                                    block_n=self.block_n)
+
+    def gathered_topk(self, queries, cand_vecs, cand_ids, *, k: int):
+        return topk_ops.gathered_topk(queries, cand_vecs, cand_ids, k=k,
+                                      block_c=self.block_c)

@@ -6,7 +6,9 @@ the same pluggable-component pattern as the label-prop registry in
 ``core/engines.py`` — rather than a string branch inside the runner.  The
 registry lives here, below both of its consumers (``retrieval/experiment.py``
 and the ``repro.eval`` grid subsystem, which re-exports it), so neither
-package depends upward on the other.
+package depends upward on the other; chunked multi-query search, backend
+selection and global-id mapping live one layer up in
+``retrieval/search_core.SearchSession``.
 
 An engine implements the :class:`RetrievalEngine` protocol:
 
@@ -30,6 +32,10 @@ Registered engines:
 
 Engines are frozen dataclasses so callers can tune hyper-parameters with
 ``dataclasses.replace`` without mutating the registry's shared instance.
+Every engine carries a ``backend`` field naming a scoring backend from
+``retrieval/backends.py`` (``jnp`` reference or ``pallas`` kernels); the
+search core sets it uniformly, so the kernel path is a config string, not a
+per-index fork.
 """
 from __future__ import annotations
 
@@ -37,7 +43,6 @@ import dataclasses
 from typing import Any, Dict, NamedTuple, Protocol, runtime_checkable
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.retrieval.exact import exact_topk
 from repro.retrieval.ivfflat import build_ivfflat, search_ivfflat
@@ -83,33 +88,13 @@ def available_retrieval_engines() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
-def chunked_search(engine: RetrievalEngine, index: Any, queries: np.ndarray,
-                   kept_ids: np.ndarray, *, k: int,
-                   query_chunk: int = 256) -> np.ndarray:
-    """Search ``queries`` in chunks (the probe gather is O(chunk·cand·d))
-    and map the index-local ids back to global entity ids via ``kept_ids``.
-
-    ``k`` is clamped to the indexed corpus size and the result padded back
-    to (Q, k) with −1, so tiny samples never underflow ``lax.top_k``.
-    """
-    k_eff = min(k, int(kept_ids.size))
-    chunks = []
-    for i in range(0, queries.shape[0], query_chunk):
-        blk = jnp.asarray(queries[i:i + query_chunk])
-        chunks.append(np.asarray(engine.search(index, blk, k=k_eff)))
-    local = np.concatenate(chunks, 0) if chunks else \
-        np.zeros((0, k_eff), np.int32)
-    if k_eff < k:
-        local = np.pad(local, ((0, 0), (0, k - k_eff)), constant_values=-1)
-    return np.where(local >= 0, kept_ids[np.clip(local, 0, None)], -1)
-
-
 @register_retrieval_engine
 @dataclasses.dataclass(frozen=True)
 class ExactEngine:
     """Blocked brute-force top-k — the recall oracle for the ANN engines."""
 
     block: int = 2048
+    backend: str = "jnp"
     name: str = "exact"
 
     def build(self, key, vecs):
@@ -117,7 +102,8 @@ class ExactEngine:
         return vecs
 
     def search(self, index, queries, *, k: int):
-        return exact_topk(queries, index, k=k, block=self.block)[1]
+        return exact_topk(queries, index, k=k, block=self.block,
+                          backend=self.backend)[1]
 
 
 @register_retrieval_engine
@@ -129,6 +115,7 @@ class IVFFlatEngine:
     n_lists: int = 64
     nprobe: int = 8
     cap_factor: float = 2.0
+    backend: str = "jnp"
     name: str = "ivfflat"
 
     def build(self, key, vecs):
@@ -138,7 +125,8 @@ class IVFFlatEngine:
 
     def search(self, index, queries, *, k: int):
         nprobe = min(self.nprobe, index.centroids.shape[0])
-        return search_ivfflat(index, queries, k=k, nprobe=nprobe)[1]
+        return search_ivfflat(index, queries, k=k, nprobe=nprobe,
+                              backend=self.backend)[1]
 
 
 @register_retrieval_engine
@@ -149,6 +137,7 @@ class LSHEngine:
 
     n_bits: int = 128
     rerank: int = 64
+    backend: str = "jnp"
     name: str = "lsh"
 
     def build(self, key, vecs):
@@ -157,7 +146,8 @@ class LSHEngine:
     def search(self, index, queries, *, k: int):
         n = index.codes.shape[0]
         rerank = min(max(self.rerank, k), n) if self.rerank > 0 else 0
-        return search_lsh(index, queries, k=k, rerank=rerank)[1]
+        return search_lsh(index, queries, k=k, rerank=rerank,
+                          backend=self.backend)[1]
 
 
 class TfIdfIndex(NamedTuple):
@@ -173,6 +163,7 @@ class TfIdfEngine:
     corpus side only, so scores are sum_j w_j q_j d_j (one IDF factor)."""
 
     block: int = 2048
+    backend: str = "jnp"
     name: str = "tfidf"
 
     def build(self, key, vecs):
@@ -183,4 +174,5 @@ class TfIdfEngine:
         return TfIdfIndex(vecs * w[None, :], w)
 
     def search(self, index, queries, *, k: int):
-        return exact_topk(queries, index.vecs, k=k, block=self.block)[1]
+        return exact_topk(queries, index.vecs, k=k, block=self.block,
+                          backend=self.backend)[1]

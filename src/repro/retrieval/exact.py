@@ -1,45 +1,23 @@
-"""Exact blocked top-k retrieval (brute force oracle for the ANN indexes and
-the retrieval_cand serving path).
-
-Candidates are scored block-by-block with a running top-k merge, so the
-(n_queries, n_candidates) score matrix is never materialised — the same
-streaming structure the Pallas topk_scoring kernel implements in VMEM.
-"""
+"""Exact top-k retrieval (brute force oracle for the ANN indexes and the
+retrieval_cand serving path), dispatched through the scoring-backend
+registry (retrieval/backends.py): ``jnp`` runs the blocked streaming merge,
+``pallas`` the fused kernels/topk_scoring kernel (interpret off-TPU)."""
 from __future__ import annotations
 
-import functools
+import dataclasses
 
-import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.retrieval.backends import get_backend
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block"))
 def exact_topk(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
-               block: int = 4096):
-    """queries (Q, D), corpus (N, D) -> (scores (Q, k), ids (Q, k))."""
-    qn, d = queries.shape
-    n = corpus.shape[0]
-    nb = (n + block - 1) // block
-    pad = nb * block - n
-    cp = jnp.pad(corpus, ((0, pad), (0, 0)))
-    blocks = cp.reshape(nb, block, d)
-
-    def step(carry, xs):
-        best_s, best_i = carry
-        blk, bi = xs
-        s = queries @ blk.T                                   # (Q, block)
-        ids = bi * block + jnp.arange(block, dtype=jnp.int32)[None]
-        valid = ids < n
-        s = jnp.where(valid, s, -jnp.inf)
-        cat_s = jnp.concatenate([best_s, s], axis=1)
-        cat_i = jnp.concatenate([best_i, jnp.broadcast_to(ids, s.shape)], 1)
-        top_s, pos = lax.top_k(cat_s, k)
-        top_i = jnp.take_along_axis(cat_i, pos, axis=1)
-        return (top_s, top_i), None
-
-    init = (jnp.full((qn, k), -jnp.inf, queries.dtype),
-            jnp.full((qn, k), -1, jnp.int32))
-    (scores, ids), _ = lax.scan(
-        step, init, (blocks, jnp.arange(nb, dtype=jnp.int32)))
-    return scores, ids
+               block: int = 4096, backend: str = "jnp"):
+    """queries (Q, D), corpus (N, D) -> (scores (Q, k), ids (Q, k));
+    score −inf / id −1 padding when k exceeds the corpus size.  ``block``
+    tunes the jnp backend's streaming block (the pallas backend's block
+    sizes live on its registry instance)."""
+    bk = get_backend(backend)
+    if backend == "jnp" and block != bk.block:
+        bk = dataclasses.replace(bk, block=block)
+    return bk.topk(queries, corpus, k=k)

@@ -29,8 +29,8 @@ from repro.data.batching import TokenBatcher
 from repro.data.synthetic import SyntheticCorpus
 from repro.retrieval.encoder import (EncoderConfig, contrastive_loss,
                                      embed_corpus, init_encoder)
-from repro.retrieval.engines import chunked_search, get_retrieval_engine
 from repro.retrieval.metrics import precision_at_k, qrel_set
+from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
@@ -76,9 +76,12 @@ def evaluate_sample(name: str, corpus: SyntheticCorpus,
                     k: int = 3, n_lists: int = 64, nprobe: int = 8,
                     max_queries: int = 2048, seed: int = 0,
                     engine: str = "ivfflat",
-                    query_chunk: int = 256) -> SearchResult:
+                    query_chunk: int = 256,
+                    search: Optional[SearchConfig] = None) -> SearchResult:
     """entity_mask None -> full corpus; ``engine`` names any registered
-    retrieval engine (n_lists/nprobe apply to ivfflat only)."""
+    retrieval engine (n_lists/nprobe apply to ivfflat only).  ``search``
+    carries backend/shard options into the search core; its engine field is
+    overridden by ``engine``."""
     n_ent = corpus.num_entities
     mask = (np.ones(n_ent, bool) if entity_mask is None
             else np.asarray(entity_mask))
@@ -96,13 +99,15 @@ def evaluate_sample(name: str, corpus: SyntheticCorpus,
     if qids.size > max_queries:
         qids = rng.choice(qids, max_queries, replace=False)
 
-    sub_vecs = jnp.asarray(entity_vecs[kept_ids])
-    eng = get_retrieval_engine(engine)
+    opts = dict((search.engine_opts or {}) if search else {})
     if engine == "ivfflat":  # honour the legacy tuning knobs
-        eng = dataclasses.replace(eng, n_lists=n_lists, nprobe=nprobe)
-    index = eng.build(jax.random.PRNGKey(seed), sub_vecs)
-    global_ids = chunked_search(eng, index, query_vecs[qids], kept_ids,
-                                k=k, query_chunk=query_chunk)
+        opts.update(n_lists=n_lists, nprobe=nprobe)
+    cfg = dataclasses.replace(search or SearchConfig(), engine=engine,
+                              query_chunk=query_chunk,
+                              engine_opts=opts or None)
+    session = SearchSession(entity_vecs[kept_ids], cfg,
+                            key=jax.random.PRNGKey(seed), ids_map=kept_ids)
+    global_ids = session.search(query_vecs[qids], k=k)
 
     pairs = qrel_set(q, e, v)
     p3 = precision_at_k(global_ids, qids, pairs, k=k)

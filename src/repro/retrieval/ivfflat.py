@@ -4,7 +4,9 @@ experiments, in JAX.
 Build: k-means (Lloyd) clusters the corpus into ``n_lists`` inverted lists,
 stored as a padded ELL block (n_lists, cap, d) so probing is dense gathers.
 Search: score the query against centroids, probe the ``nprobe`` nearest
-lists, score their members, take top-k. All static-shape and jit-able.
+lists, then score their members through the scoring-backend registry's
+``gathered_topk`` primitive (retrieval/backends.py) — pure jnp or the
+Pallas per-query candidate kernel. All static-shape and jit-able.
 """
 from __future__ import annotations
 
@@ -14,6 +16,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.retrieval.backends import get_backend
 
 
 class IVFFlatIndex(NamedTuple):
@@ -72,20 +76,27 @@ def build_ivfflat(key, corpus: jnp.ndarray, *, n_lists: int,
     return IVFFlatIndex(cent, vecs, ids, mask)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "nprobe"))
-def search_ivfflat(index: IVFFlatIndex, queries: jnp.ndarray, *, k: int,
-                   nprobe: int = 8):
-    """queries (Q, d) -> (scores (Q, k), ids (Q, k)); inner product metric."""
+def probe_candidates(index: IVFFlatIndex, queries: jnp.ndarray, *,
+                     nprobe: int):
+    """Select the ``nprobe`` nearest lists per query and gather their
+    members as a per-query candidate set: (cand_vecs (Q, nprobe·cap, d),
+    cand_ids (Q, nprobe·cap) with −1 marking padding slots)."""
     cscore = queries @ index.centroids.T                   # (Q, n_lists)
     _, probe = lax.top_k(cscore, nprobe)                   # (Q, nprobe)
     vecs = index.vecs[probe]                               # (Q, nprobe, cap, d)
     ids = index.ids[probe]                                 # (Q, nprobe, cap)
     mask = index.mask[probe]
-    s = jnp.einsum("qd,qpcd->qpc", queries, vecs)
-    s = jnp.where(mask, s, -jnp.inf)
-    qn = queries.shape[0]
-    flat_s = s.reshape(qn, -1)
-    flat_i = ids.reshape(qn, -1)
-    top_s, pos = lax.top_k(flat_s, k)
-    top_i = jnp.take_along_axis(flat_i, pos, axis=1)
-    return top_s, top_i
+    qn, d = queries.shape
+    cand_vecs = vecs.reshape(qn, -1, d)
+    cand_ids = jnp.where(mask, ids, -1).reshape(qn, -1)
+    return cand_vecs, cand_ids
+
+
+@functools.partial(jax.jit, static_argnames=("k", "nprobe", "backend"))
+def search_ivfflat(index: IVFFlatIndex, queries: jnp.ndarray, *, k: int,
+                   nprobe: int = 8, backend: str = "jnp"):
+    """queries (Q, d) -> (scores (Q, k), ids (Q, k)); inner product metric,
+    probe-scoring dispatched through ``backend``."""
+    cand_vecs, cand_ids = probe_candidates(index, queries, nprobe=nprobe)
+    return get_backend(backend).gathered_topk(queries, cand_vecs, cand_ids,
+                                              k=k)

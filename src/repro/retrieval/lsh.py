@@ -3,8 +3,9 @@ option and Grale-style LSH graph building [4]).
 
 Vectors hash to ``n_bits`` sign bits packed into int32 lanes; search ranks by
 Hamming distance (XOR + popcount) with optional exact rerank of the top
-candidates. Bit packing + popcount is the VPU-friendly formulation the
-Pallas lsh_hamming kernel implements.
+candidates.  The Hamming scan dispatches through the scoring-backend
+registry (retrieval/backends.py): ``jnp`` materialises the (Q, N) distance
+matrix, ``pallas`` streams it through the kernels/lsh_hamming kernel.
 """
 from __future__ import annotations
 
@@ -14,6 +15,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax import lax
+
+from repro.kernels.topk_scoring.ref import pad_topk
+from repro.retrieval.backends import get_backend
 
 
 class LSHIndex(NamedTuple):
@@ -50,18 +54,31 @@ def build_lsh(key, corpus: jnp.ndarray, *, n_bits: int = 128) -> LSHIndex:
     return LSHIndex(proj, encode(proj, corpus), corpus)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "rerank"))
-def search_lsh(index: LSHIndex, queries: jnp.ndarray, *, k: int,
-               rerank: int = 0):
-    """Hamming-distance ANN; if ``rerank`` > 0, exact-rerank that many
-    Hamming candidates with true inner products."""
-    qc = encode(index.proj, queries)                      # (Q, W)
-    ham = popcount32(qc[:, None, :] ^ index.codes[None]).sum(-1)  # (Q, N)
-    if rerank <= 0:
-        d, ids = lax.top_k(-ham, k)
-        return -d.astype(queries.dtype), ids
-    _, cand = lax.top_k(-ham, rerank)                     # (Q, rerank)
-    cvecs = index.vecs[cand]                              # (Q, rerank, d)
+def rerank_candidates(vecs: jnp.ndarray, queries: jnp.ndarray,
+                      cand: jnp.ndarray, *, k: int):
+    """Exact inner-product rerank of per-query candidate ids (−1 = miss):
+    (Q, R) -> top-k (scores, ids).  Shared by the single-device and sharded
+    lsh search paths so both rank identically."""
+    cvecs = vecs[jnp.maximum(cand, 0)]                    # (Q, R, d)
     s = jnp.einsum("qd,qrd->qr", queries, cvecs)
-    top_s, pos = lax.top_k(s, k)
-    return top_s, jnp.take_along_axis(cand, pos, axis=1)
+    s = jnp.where(cand >= 0, s, -jnp.inf)
+    top_s, pos = lax.top_k(s, min(k, cand.shape[1]))
+    top_i = jnp.take_along_axis(cand, pos, axis=1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    return pad_topk(top_s, top_i, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rerank", "backend"))
+def search_lsh(index: LSHIndex, queries: jnp.ndarray, *, k: int,
+               rerank: int = 0, backend: str = "jnp"):
+    """Hamming-distance ANN; if ``rerank`` > 0, exact-rerank that many
+    Hamming candidates with true inner products (higher score = better);
+    with ``rerank`` <= 0 the first result is the POSITIVE Hamming distance
+    (lower = better, +inf for misses), matching the historical API."""
+    bk = get_backend(backend)
+    qc = encode(index.proj, queries)                      # (Q, W)
+    if rerank <= 0:
+        neg, ids = bk.hamming_topk(qc, index.codes, k=k)
+        return (-neg).astype(queries.dtype), ids
+    _, cand = bk.hamming_topk(qc, index.codes, k=rerank)  # (Q, rerank)
+    return rerank_candidates(index.vecs, queries, cand, k=k)

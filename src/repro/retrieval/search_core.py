@@ -1,0 +1,114 @@
+"""Search core front door — Layer 3 (DESIGN.md §9).
+
+One :class:`SearchSession` is the single implementation of "build an index
+once, answer many queries" that every consumer routes through: the
+experiment grid (``eval/runner.py``), the Table I/II experiment
+(``retrieval/experiment.py``), the evaluation CLI (``launch/evaluate.py``)
+and the online serving path (``serve/engine.py`` — the paper's Fig. 5
+query → embed → ANN component).  Offline eval and online serving therefore
+share one code path, so a backend or sharding change benchmarked in the
+grid is exactly what serves traffic.
+
+Configuration is one declarative :class:`SearchConfig`:
+
+  * ``engine``  — a registered retrieval engine (retrieval/engines.py);
+  * ``backend`` — a registered scoring backend (retrieval/backends.py,
+    Layer 1): ``jnp`` reference or ``pallas`` kernels;
+  * ``sharded``/``mesh`` — route searches through the mesh-partitioned
+    Layer 2 (retrieval/sharded.py);
+  * ``query_chunk`` — chunked multi-query batching, so the probe gather
+    stays O(chunk · cand · d) regardless of the query load;
+  * ``engine_opts`` — hyper-parameter overrides applied with
+    ``dataclasses.replace`` (e.g. ``{"n_lists": 16}``).
+
+Unknown engine/backend names fail fast with the registry's error message
+(the ``core/engines.py`` UX).  ``k`` is clamped to the indexed corpus size
+and padded back with −1 ids, so tiny sampled corpora never crash a search.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.backends import get_backend
+from repro.retrieval.engines import get_retrieval_engine
+from repro.retrieval.sharded import sharded_search
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Declarative search-core configuration (engine × backend × shard)."""
+
+    engine: str = "exact"
+    backend: str = "jnp"
+    sharded: bool = False
+    mesh: Any = None              # jax.sharding.Mesh when sharded
+    query_chunk: int = 256
+    engine_opts: Optional[Mapping[str, Any]] = None
+
+
+class SearchSession:
+    """Build-once, chunked multi-query search over one corpus.
+
+    ``corpus_vecs`` f32[N, D] are indexed once at construction (globally —
+    sharding distributes scoring, never index statistics); ``search`` then
+    answers any number of query batches.  When ``ids_map`` is given (the
+    sample's kept entity ids), results map from index-local rows back to
+    global ids, with −1 for misses — the contract the eval grid's metric
+    stages consume.
+    """
+
+    def __init__(self, corpus_vecs, config: Optional[SearchConfig] = None,
+                 *, key: Optional[jax.Array] = None,
+                 ids_map: Optional[np.ndarray] = None, **overrides):
+        cfg = config or SearchConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        engine = get_retrieval_engine(cfg.engine)   # registry error UX
+        get_backend(cfg.backend)                    # fail fast, same UX
+        if cfg.sharded and cfg.mesh is None:
+            raise ValueError("sharded search needs a mesh; pass "
+                             "SearchConfig(mesh=...) (launch.mesh helpers)")
+        if cfg.engine_opts:
+            engine = dataclasses.replace(engine, **dict(cfg.engine_opts))
+        self.config = cfg
+        self.engine = dataclasses.replace(engine, backend=cfg.backend)
+        vecs = jnp.asarray(corpus_vecs)
+        self.corpus_size = int(vecs.shape[0])
+        self.ids_map = None if ids_map is None else np.asarray(ids_map)
+        if self.ids_map is not None and self.ids_map.size != self.corpus_size:
+            raise ValueError(
+                f"ids_map has {self.ids_map.size} entries for a corpus of "
+                f"{self.corpus_size} vectors")
+        self.index = self.engine.build(
+            key if key is not None else jax.random.PRNGKey(0), vecs)
+
+    def _search_chunk(self, queries: jnp.ndarray, k: int) -> np.ndarray:
+        if self.config.sharded:
+            ids = sharded_search(self.engine, self.index, queries, k=k,
+                                 mesh=self.config.mesh)[1]
+        else:
+            ids = self.engine.search(self.index, queries, k=k)
+        return np.asarray(ids)
+
+    def search(self, queries, *, k: int) -> np.ndarray:
+        """Top-k ids i32[Q, k] for a query batch (−1 padding for misses);
+        chunked by ``query_chunk``, mapped through ``ids_map`` when set."""
+        q = np.asarray(queries)
+        k_eff = max(1, min(k, self.corpus_size))
+        chunk = self.config.query_chunk
+        parts = [self._search_chunk(jnp.asarray(q[i:i + chunk]), k_eff)
+                 for i in range(0, q.shape[0], chunk)]
+        local = (np.concatenate(parts, 0) if parts
+                 else np.zeros((0, k_eff), np.int32))
+        if k_eff < k:
+            local = np.pad(local, ((0, 0), (0, k - k_eff)),
+                           constant_values=-1)
+        if self.ids_map is None:
+            return local
+        return np.where(local >= 0, self.ids_map[np.clip(local, 0, None)],
+                        -1)

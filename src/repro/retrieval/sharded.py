@@ -1,0 +1,235 @@
+"""Sharded search — Layer 2 of the search core (DESIGN.md §9).
+
+The corpus side of a built index is partitioned across a device mesh with
+``shard_map``: each shard runs the engine's scoring backend over its local
+rows (per-shard top-k), then the per-shard partial results are merged with
+one tiled all-gather + ``lax.top_k`` — the same gather/merge collectives the
+sharded WindTunnel pipeline uses (distributed/collectives.py).
+
+What is sharded is the *work the index was built to do*, never the index
+construction itself: the index is built once, globally (same key, same
+k-means / projection / IDF statistics as the single-device path), and the
+sharded layer only distributes the scoring.  That is what makes the result
+equivalent to single-device search — on a 1-device mesh every stage is
+operation-for-operation the single-device program (bit-consistent), and on
+larger meshes the merged candidate set is exactly the single-device
+candidate set, so results are set-equal under the backend tie policy
+(retrieval/backends.py: ties break toward the first candidate in layout
+order — lower ids for the row-sharded scans, probe position for ivfflat;
+the cross-shard merge scans shards in ascending row/list order,
+preserving it).
+
+Partition plans per engine:
+
+  * ``exact`` / ``tfidf`` — corpus rows over the mesh; per-shard dense
+    top-k via ``backend.topk``; global ids recovered from the shard's row
+    offset.
+  * ``lsh``   — packed codes row-sharded; per-shard Hamming top-rerank via
+    ``backend.hamming_topk``; merged candidates exact-reranked on the
+    replicated vectors (the rerank set is tiny — ≤ rerank ids per query).
+  * ``ivfflat`` — inverted lists sharded; centroids replicate, so every
+    shard selects the SAME global top-``nprobe`` probe set and scores only
+    the probed lists it owns via ``backend.gathered_topk`` — the union of
+    per-shard candidates is exactly the single-device probe gather.
+
+Padding invariants: rows/lists pad to a multiple of the shard count; padded
+rows mask to −inf/−1 before the merge and can never displace a real
+candidate.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.distributed import collectives as coll
+from repro.distributed.sharding import RETRIEVAL_RULES, partition_axes
+from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
+from repro.retrieval.backends import get_backend
+from repro.retrieval.lsh import encode, rerank_candidates
+
+
+def _resolve_axes(mesh: Mesh, axes: Optional[tuple]) -> tuple:
+    if axes is None:
+        axes = partition_axes(mesh, "corpus", RETRIEVAL_RULES)
+    axes = tuple(axes) if axes else ()
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh} has none of the retrieval corpus axes "
+            f"({RETRIEVAL_RULES['corpus']})")
+    return axes
+
+
+def _axis_count(mesh: Mesh, axes: tuple) -> int:
+    d = 1
+    for a in axes:
+        d *= mesh.shape[a]
+    return d
+
+
+def _row_spec(axes: tuple, ndim: int) -> P:
+    lead = axes if len(axes) > 1 else axes[0]
+    return P(lead, *([None] * (ndim - 1)))
+
+
+def _merge(s: jnp.ndarray, i: jnp.ndarray, axes: tuple, k: int):
+    """All-gather per-shard (scores, ids) partials along the k axis and
+    reduce to the global top-k (replicated on every shard)."""
+    s = lax.all_gather(s, axes, axis=1, tiled=True)
+    i = lax.all_gather(i, axes, axis=1, tiled=True)
+    top_s, pos = lax.top_k(s, min(k, s.shape[1]))
+    return top_s, jnp.take_along_axis(i, pos, axis=1)
+
+
+def _rowwise_topk(backend, vecs: jnp.ndarray, queries: jnp.ndarray, *,
+                  k: int, mesh: Mesh, axes: tuple):
+    """Row-sharded dense top-k: the shared plan for exact and tfidf."""
+    n, dim = vecs.shape
+    d = _axis_count(mesh, axes)
+    rows = -(-n // d)
+    k_l = min(k, rows)
+    pad = rows * d - n
+    if pad:
+        # sentinel coordinate (the kernels/topk_scoring/ops.py trick):
+        # queries get 1.0, real rows 0.0, padded rows -BIG, so a padded row
+        # scores -BIG and can never displace a real candidate from the
+        # LOCAL top-k (a zero-padded row would score 0 and beat genuinely
+        # negative candidates before the post-hoc validity mask)
+        queries = jnp.pad(queries, ((0, 0), (0, 1)), constant_values=1.0)
+        vp = jnp.pad(vecs, ((0, pad), (0, 1)))
+        vp = vp.at[n:, dim].set(-1e30)
+    else:
+        vp = vecs
+
+    def shard_fn(v_l, q):
+        row0 = coll.flat_axis_index(axes) * rows
+        s, i = backend.topk(q, v_l, k=k_l)
+        gid = row0 + i
+        ok = (i >= 0) & (gid < n)
+        return _merge(jnp.where(ok, s, -jnp.inf),
+                      jnp.where(ok, gid, -1), axes, k)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(_row_spec(axes, 2), P(None, None)),
+                   out_specs=(P(), P()), check_rep=False)
+    return _pad_topk(*fn(vp, queries), k)
+
+
+def _sharded_exact(engine, index, queries, *, k, mesh, axes):
+    return _rowwise_topk(get_backend(engine.backend), index, queries,
+                         k=k, mesh=mesh, axes=axes)
+
+
+def _sharded_tfidf(engine, index, queries, *, k, mesh, axes):
+    # IDF weights were folded into index.vecs at (global) build time, so the
+    # sharded scan is the exact engine's plan over the weighted rows.
+    return _rowwise_topk(get_backend(engine.backend), index.vecs, queries,
+                         k=k, mesh=mesh, axes=axes)
+
+
+def _sharded_lsh(engine, index, queries, *, k, mesh, axes):
+    backend = get_backend(engine.backend)
+    n = index.codes.shape[0]
+    d = _axis_count(mesh, axes)
+    rows = -(-n // d)
+    rerank = min(max(engine.rerank, k), n) if engine.rerank > 0 else 0
+    target = rerank if rerank > 0 else k
+    t_l = min(target, rows)
+    qc = encode(index.proj, queries)
+    pad = rows * d - n
+    if pad:
+        # a zero-padded code row would get a REAL Hamming distance and
+        # could evict a true candidate from the local top-k, so padded rows
+        # get W+1 extra all-ones words (queries and real rows get zeros):
+        # their distance grows by 32·(W+1) > 32·W ≥ any real distance,
+        # strictly below every real row — exact integer arithmetic, and
+        # real-row distances are untouched
+        w = index.codes.shape[1]
+        cp = jnp.pad(index.codes, ((0, pad), (0, w + 1)))
+        cp = cp.at[n:, w:].set(-1)
+        qc = jnp.pad(qc, ((0, 0), (0, w + 1)))
+    else:
+        cp = index.codes
+
+    def shard_fn(c_l, qc_):
+        row0 = coll.flat_axis_index(axes) * rows
+        s, i = backend.hamming_topk(qc_, c_l, k=t_l)
+        gid = row0 + i
+        ok = (i >= 0) & (gid < n)
+        return _merge(jnp.where(ok, s, -jnp.inf),
+                      jnp.where(ok, gid, -1), axes, target)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(_row_spec(axes, 2), P(None, None)),
+                   out_specs=(P(), P()), check_rep=False)
+    neg, cand = fn(cp, qc)
+    if rerank <= 0:
+        # match search_lsh's historical no-rerank API: positive Hamming
+        # distance, lower = better (+inf for misses)
+        neg, cand = _pad_topk(neg, cand, k)
+        return (-neg).astype(queries.dtype), cand
+    # exact rerank of the merged global candidates — identical math to the
+    # single-device search_lsh rerank step, on the replicated vectors
+    return rerank_candidates(index.vecs, queries, cand, k=k)
+
+
+def _sharded_ivfflat(engine, index, queries, *, k, mesh, axes):
+    backend = get_backend(engine.backend)
+    n_lists, cap, dim = index.vecs.shape
+    nprobe = min(engine.nprobe, n_lists)
+    d = _axis_count(mesh, axes)
+    ll = -(-n_lists // d)
+    pad = ll * d - n_lists
+    vecs = jnp.pad(index.vecs, ((0, pad), (0, 0), (0, 0)))
+    ids = jnp.pad(index.ids, ((0, pad), (0, 0)), constant_values=-1)
+    mask = jnp.pad(index.mask, ((0, pad), (0, 0)))
+    k_l = min(k, nprobe * cap)
+
+    def shard_fn(v_l, i_l, m_l, cent, q):
+        l0 = coll.flat_axis_index(axes) * ll
+        cscore = q @ cent.T                          # (Q, n_lists) global
+        _, probe = lax.top_k(cscore, nprobe)         # same probes everywhere
+        own = (probe >= l0) & (probe < l0 + ll)
+        lp = jnp.clip(probe - l0, 0, ll - 1)
+        v = v_l[lp]                                  # (Q, nprobe, cap, dim)
+        cid = jnp.where(m_l[lp] & own[..., None], i_l[lp], -1)
+        qn = q.shape[0]
+        s, gid = backend.gathered_topk(q, v.reshape(qn, -1, dim),
+                                       cid.reshape(qn, -1), k=k_l)
+        return _merge(s, gid, axes, k)
+
+    fn = shard_map(shard_fn, mesh=mesh,
+                   in_specs=(_row_spec(axes, 3), _row_spec(axes, 2),
+                             _row_spec(axes, 2), P(None, None),
+                             P(None, None)),
+                   out_specs=(P(), P()), check_rep=False)
+    return _pad_topk(*fn(vecs, ids, mask, index.centroids, queries), k)
+
+
+_SHARDED_IMPLS: Dict[str, Callable] = {
+    "exact": _sharded_exact,
+    "tfidf": _sharded_tfidf,
+    "lsh": _sharded_lsh,
+    "ivfflat": _sharded_ivfflat,
+}
+
+
+def sharded_search(engine, index, queries: jnp.ndarray, *, k: int,
+                   mesh: Mesh, axes: Optional[tuple] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mesh-partitioned ``engine.search`` with equivalent semantics:
+    (scores f32[Q, k], ids i32[Q, k]) into the corpus the index was built
+    from, −inf/−1 padding for misses.  Bit-consistent with single-device
+    search on a 1-device mesh; set-equal under the backend tie policy on
+    larger meshes."""
+    try:
+        impl = _SHARDED_IMPLS[engine.name]
+    except KeyError:
+        raise ValueError(
+            f"no sharded search plan for engine {engine.name!r}; engines "
+            f"with plans: {', '.join(sorted(_SHARDED_IMPLS))}") from None
+    return impl(engine, index, queries, k=k, mesh=mesh,
+                axes=_resolve_axes(mesh, axes))

@@ -1,3 +1,4 @@
-from repro.serve.engine import ServeEngine, ServeConfig
+from repro.serve.engine import (RagEngine, RetrievalFrontend, ServeConfig,
+                                ServeEngine)
 
-__all__ = ["ServeEngine", "ServeConfig"]
+__all__ = ["ServeEngine", "ServeConfig", "RetrievalFrontend", "RagEngine"]

@@ -1,11 +1,15 @@
 """Batched serving engine with continuous batching over a shared KV cache.
 
 The paper's Fig. 5 online component (query -> embed -> ANN) plus a
-generative RAG path: requests join a fixed-slot batch; finished slots are
-refilled without stalling in-flight requests (continuous batching). Slot
-state lives in the rolling KV cache; prefill for a joining request runs
-token-by-token through decode_step (simple, correct; chunked prefill is a
-§Perf extension).
+generative RAG path: :class:`RetrievalFrontend` embeds incoming queries and
+answers them through the SAME :class:`~repro.retrieval.search_core.
+SearchSession` the offline experiment grid uses (engine/backend/shard are
+one config, DESIGN.md §9), and :class:`RagEngine` feeds the retrieved
+passages into the continuous-batching decoder. Requests join a fixed-slot
+batch; finished slots are refilled without stalling in-flight requests
+(continuous batching). Slot state lives in the rolling KV cache; prefill
+for a joining request runs token-by-token through decode_step (simple,
+correct; chunked prefill is a §Perf extension).
 """
 from __future__ import annotations
 
@@ -18,6 +22,7 @@ import numpy as np
 
 from repro.models.transformer import (TransformerConfig, decode_step,
                                       init_kv_cache)
+from repro.retrieval.search_core import SearchConfig, SearchSession
 
 
 @dataclasses.dataclass
@@ -102,3 +107,51 @@ class ServeEngine:
     def drain(self, key: Optional[jax.Array] = None):
         while self.step(key):
             pass
+
+
+class RetrievalFrontend:
+    """Fig. 5 online path: query -> embed -> ANN, through the search core.
+
+    ``embed_fn`` maps a batch of raw queries (token arrays, text — whatever
+    the deployment embeds) to f32[Q, D] vectors on the same geometry the
+    ``corpus_vecs`` were embedded with; retrieval itself is one
+    :class:`SearchSession`, so the online path and the offline grid share
+    one implementation (and one benchmark surface).
+    """
+
+    def __init__(self, corpus_vecs, embed_fn: Callable[..., Any], *,
+                 config: Optional[SearchConfig] = None,
+                 key: Optional[jax.Array] = None,
+                 ids_map: Optional[np.ndarray] = None, **overrides):
+        self.embed_fn = embed_fn
+        self.session = SearchSession(corpus_vecs, config, key=key,
+                                     ids_map=ids_map, **overrides)
+
+    def retrieve(self, raw_queries, *, k: int = 3) -> np.ndarray:
+        """Raw queries -> top-k ids i32[Q, k] (−1 padding for misses)."""
+        return self.session.search(self.embed_fn(raw_queries), k=k)
+
+
+class RagEngine:
+    """Retrieval-augmented serving: the frontend's top passage is prepended
+    to the prompt and decoded through the continuous-batching engine."""
+
+    def __init__(self, frontend: RetrievalFrontend, engine: ServeEngine,
+                 passage_tokens: Callable[[int], np.ndarray], *,
+                 ctx_tokens: int = 24):
+        self.frontend = frontend
+        self.engine = engine
+        self.passage_tokens = passage_tokens   # global id -> i32[tokens]
+        self.ctx_tokens = ctx_tokens
+
+    def submit_query(self, raw_query, query_tokens: np.ndarray, *,
+                     k: int = 1):
+        """Retrieve for one query and enqueue its RAG prompt; returns
+        (request-or-None, retrieved ids i32[k])."""
+        ids = self.frontend.retrieve([raw_query], k=k)[0]
+        ctx = (self.passage_tokens(int(ids[0]))[:self.ctx_tokens]
+               if ids.size and ids[0] >= 0 else
+               np.zeros((0,), np.int32))
+        prompt = np.concatenate([np.asarray(query_tokens, np.int32),
+                                 np.asarray(ctx, np.int32)])
+        return self.engine.submit(prompt), ids

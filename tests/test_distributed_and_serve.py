@@ -95,6 +95,45 @@ def test_serve_engine_greedy_matches_decode_loop():
     assert req.out == out[:5]
 
 
+def test_serve_slot_reuse_has_clean_kv_position():
+    """Regression: a slot freed by a finished request is immediately
+    reusable by submit with a clean KV position — the recycled request's
+    output equals a fresh engine's output for the same prompt."""
+    cfg = TransformerConfig(vocab_size=64, d_model=32, n_layers=2, n_heads=4,
+                            n_kv_heads=2, d_ff=48, dtype=jnp.float32)
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_batch=1, max_seq=32, max_new_tokens=4)
+    eng = ServeEngine(params, cfg, scfg)
+    r1 = eng.submit(np.array([5, 11, 2], np.int32))
+    eng.drain()
+    assert len(r1.out) == 4
+    r2 = eng.submit(np.array([9, 3], np.int32))    # reuses the freed slot
+    assert r2 is not None
+    eng.drain()
+    fresh = ServeEngine(params, cfg, scfg)
+    rf = fresh.submit(np.array([9, 3], np.int32))
+    fresh.drain()
+    assert r2.out == rf.out
+
+
+def test_serve_drain_terminates_on_simultaneous_finish():
+    """Regression: drain() terminates when every slot finishes on the same
+    step (equal prompt lengths and budgets), leaving all slots free."""
+    cfg = TransformerConfig(vocab_size=64, d_model=32, n_layers=2, n_heads=4,
+                            n_kv_heads=2, d_ff=48, dtype=jnp.float32)
+    params = init_transformer(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(params, cfg, ServeConfig(max_batch=3, max_seq=32,
+                                               max_new_tokens=3))
+    reqs = [eng.submit(np.array([i + 1, i + 2], np.int32))
+            for i in range(3)]
+    assert all(r is not None for r in reqs)
+    eng.drain()
+    assert all(len(r.out) == 3 for r in reqs)
+    # every slot must have been freed on that same finishing step
+    assert all(s is None for s in eng.slots)
+    assert eng.submit(np.array([7], np.int32)) is not None
+
+
 def test_neighbor_sampler_blocks():
     rng = np.random.default_rng(0)
     n, e = 200, 1500

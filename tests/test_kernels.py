@@ -11,8 +11,8 @@ from repro.kernels.label_prop.ops import label_prop_round
 from repro.kernels.label_prop.ref import label_prop_round_ref
 from repro.kernels.lsh_hamming.ops import hamming_topk
 from repro.kernels.lsh_hamming.ref import hamming_topk_ref
-from repro.kernels.topk_scoring.ops import topk_scores
-from repro.kernels.topk_scoring.ref import topk_scores_ref
+from repro.kernels.topk_scoring.ops import gathered_topk, topk_scores
+from repro.kernels.topk_scoring.ref import gathered_topk_ref, topk_scores_ref
 from repro.core.label_prop import ell_round
 
 
@@ -31,6 +31,65 @@ def test_topk_scoring(q, n, d, k, dtype):
                                atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
     if dtype == jnp.float32:
         assert (np.asarray(i1) == np.asarray(i2)).all()
+
+
+@pytest.mark.parametrize("q,n,d,k,use_kernel", [
+    (3, 50, 16, 7, True),     # q below block_q floor, n below block_n floor
+    (5, 40, 8, 60, True),     # k > 32 -> ref fallback, and k > n
+    (4, 8, 8, 33, True),      # ref fallback with k > n
+    (3, 5, 8, 9, True),       # kernel path with k > n
+    (3, 5, 8, 9, False),      # forced ref with k > n
+])
+def test_topk_scoring_odd_shapes(q, n, d, k, use_kernel):
+    """Satellite: non-block-multiple k/N never crash the dispatch wrapper;
+    the valid prefix matches the oracle and the k > N tail is -inf/-1."""
+    key = jax.random.PRNGKey(q * n + k)
+    qs = jax.random.normal(key, (q, d))
+    cs = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    s, i = topk_scores(qs, cs, k=k, use_kernel=use_kernel)
+    k_eff = min(k, n)
+    s_ref, i_ref = topk_scores_ref(qs, cs, k=k_eff)
+    assert s.shape == (q, k) and i.shape == (q, k)
+    np.testing.assert_allclose(np.asarray(s)[:, :k_eff],
+                               np.asarray(s_ref), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i)[:, :k_eff] == np.asarray(i_ref)).all()
+    assert (np.asarray(i)[:, k_eff:] == -1).all()
+    assert np.isneginf(np.asarray(s)[:, k_eff:]).all()
+
+
+@pytest.mark.parametrize("q,n,w,k", [(5, 40, 2, 60), (3, 5, 2, 9),
+                                     (37, 130, 3, 11)])
+def test_lsh_hamming_odd_shapes(q, n, w, k):
+    kq = jax.random.PRNGKey(q + k)
+    qc = jax.random.randint(kq, (q, w), -2**31, 2**31 - 1, dtype=jnp.int32)
+    cc = jax.random.randint(jax.random.PRNGKey(7), (n, w), -2**31,
+                            2**31 - 1, dtype=jnp.int32)
+    s, i = hamming_topk(qc, cc, k=k, block_q=32, block_n=256)
+    k_eff = min(k, n)
+    s_ref, _ = hamming_topk_ref(qc, cc, k=k_eff)
+    assert i.shape == (q, k)
+    np.testing.assert_allclose(np.asarray(s)[:, :k_eff], np.asarray(s_ref))
+    assert (np.asarray(i)[:, k_eff:] == -1).all()
+
+
+@pytest.mark.parametrize("q,c,d,k", [
+    (7, 100, 16, 5), (3, 513, 8, 10), (1, 40, 4, 45), (9, 257, 8, 32),
+])
+def test_gathered_topk(q, c, d, k):
+    """Per-query candidate kernel (the ivfflat probe-scoring step) vs the
+    jnp oracle, with -1 holes in the candidate lists and odd shapes."""
+    key = jax.random.PRNGKey(q * c)
+    qs = jax.random.normal(key, (q, d))
+    cv = jax.random.normal(jax.random.PRNGKey(2), (q, c, d))
+    ci = jax.random.randint(jax.random.PRNGKey(3), (q, c), -1, 10_000,
+                            dtype=jnp.int32)
+    s, i = gathered_topk(qs, cv, ci, k=k)
+    k_eff = min(k, c)
+    s_ref, i_ref = gathered_topk_ref(qs, cv, ci, k=k_eff)
+    np.testing.assert_allclose(np.asarray(s)[:, :k_eff], np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i)[:, :k_eff] == np.asarray(i_ref)).all()
+    assert (np.asarray(i)[:, k_eff:] == -1).all()
 
 
 @pytest.mark.parametrize("b,s,h,hkv,d", [

@@ -1,0 +1,238 @@
+"""Search-core tests (DESIGN.md §9): scoring-backend registry and
+jnp-vs-pallas parity for every retrieval engine, sharded-search equivalence
+on 1-device and 2x1 meshes, and the SearchSession front door shared by the
+offline grid and the serving path."""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.mesh import make_host_mesh
+from repro.retrieval.backends import (ScoringBackend, available_backends,
+                                      get_backend)
+from repro.retrieval.engines import (available_retrieval_engines,
+                                     get_retrieval_engine)
+from repro.retrieval.search_core import SearchConfig, SearchSession
+from repro.retrieval.sharded import sharded_search
+
+ENGINES = ("exact", "ivfflat", "lsh", "tfidf")
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    vecs = jax.random.normal(key, (301, 24))
+    queries = jax.random.normal(jax.random.PRNGKey(1), (9, 24))
+    return vecs, queries
+
+
+def _row_sets(ids):
+    return [set(int(x) for x in row if x >= 0) for row in np.asarray(ids)]
+
+
+def test_backend_registry_contents():
+    assert {"jnp", "pallas"} <= set(available_backends())
+    for name in available_backends():
+        assert isinstance(get_backend(name), ScoringBackend)
+    assert set(ENGINES) == set(available_retrieval_engines())
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(ValueError, match="registered backends"):
+        get_backend("cuda")
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_pallas_backend_matches_jnp(data, engine):
+    """Every registered engine produces pallas-backend top-k set-equal to
+    the jnp backend (the documented tie policy breaks ties to lower ids on
+    both, so continuous scores give exact id-array equality too)."""
+    vecs, queries = data
+    eng = get_retrieval_engine(engine)
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    ids_j = eng.search(index, queries, k=5)
+    ids_p = dataclasses.replace(eng, backend="pallas").search(
+        index, queries, k=5)
+    assert _row_sets(ids_j) == _row_sets(ids_p)
+
+
+@pytest.mark.parametrize("backend", ("jnp", "pallas"))
+@pytest.mark.parametrize("engine", ENGINES)
+def test_sharded_matches_single_device_1dev(data, engine, backend):
+    """Layer 2 on a 1-device mesh is bit-consistent with single-device
+    search for every engine x backend."""
+    vecs, queries = data
+    eng = dataclasses.replace(get_retrieval_engine(engine), backend=backend)
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    ref = np.asarray(eng.search(index, queries, k=5))
+    _, ids = sharded_search(eng, index, queries, k=5, mesh=make_host_mesh())
+    assert (np.asarray(ids) == ref).all(), engine
+
+
+def test_sharded_k_exceeds_corpus(data):
+    vecs, queries = data
+    eng = get_retrieval_engine("exact")
+    index = eng.build(jax.random.PRNGKey(0), vecs[:3])
+    s, ids = sharded_search(eng, index, queries, k=7, mesh=make_host_mesh())
+    ids = np.asarray(ids)
+    assert ids.shape == (queries.shape[0], 7)
+    assert (ids[:, 3:] == -1).all()
+    assert np.isneginf(np.asarray(s)[:, 3:]).all()
+
+
+def test_sharded_unknown_engine(data):
+    vecs, queries = data
+
+    class FaissEngine:
+        name = "faiss"
+
+    with pytest.raises(ValueError, match="sharded search plan"):
+        sharded_search(FaissEngine(), vecs, queries, k=3,
+                       mesh=make_host_mesh())
+
+
+_TWO_DEVICE_SCRIPT = textwrap.dedent("""\
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    assert len(jax.devices()) == 2, jax.devices()
+    from repro.retrieval.engines import (available_retrieval_engines,
+                                         get_retrieval_engine)
+    from repro.retrieval.lsh import search_lsh
+    from repro.retrieval.sharded import sharded_search
+    mesh = jax.make_mesh((2, 1), ("data", "model"))
+    # N=301 is odd on purpose: the padded shard row must never displace a
+    # real candidate; the -2.0 shift makes every score negative, the case a
+    # zero-scoring pad row would win
+    for shift in (0.0, -2.0):
+        vecs = jax.random.normal(jax.random.PRNGKey(0), (301, 24)) + shift
+        queries = jax.random.normal(jax.random.PRNGKey(1), (9, 24))
+        for name in available_retrieval_engines():
+            eng = get_retrieval_engine(name)
+            index = eng.build(jax.random.PRNGKey(0), vecs)
+            ref = np.asarray(eng.search(index, queries, k=5))
+            _, ids = sharded_search(eng, index, queries, k=5, mesh=mesh)
+            ids = np.asarray(ids)
+            for a, b in zip(ids, ref):
+                assert set(a.tolist()) == set(b.tolist()), (name, a, b)
+    # reviewer repro: all-negative 1-d corpus, N=5 -> pad row on shard 1
+    corpus = jnp.asarray([[-10.], [-11.], [-12.], [-1.], [-2.]])
+    eng = get_retrieval_engine("exact")
+    _, ids = sharded_search(eng, corpus, jnp.asarray([[1.]]), k=2,
+                            mesh=mesh)
+    assert np.asarray(ids)[0].tolist() == [3, 4], np.asarray(ids)
+    # lsh without rerank: pure Hamming ranking must also survive padding
+    eng = dataclasses.replace(get_retrieval_engine("lsh"), n_bits=32,
+                              rerank=0)
+    vecs = jax.random.normal(jax.random.PRNGKey(2), (157, 8))
+    queries = jax.random.normal(jax.random.PRNGKey(3), (7, 8))
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    d_ref, _ = search_lsh(index, queries, k=5, rerank=0)
+    d_sh, _ = sharded_search(eng, index, queries, k=5, mesh=mesh)
+    assert np.allclose(np.sort(np.asarray(d_sh), 1),
+                       np.sort(np.asarray(d_ref), 1))
+    print("2x1-OK")
+""")
+
+
+def test_sharded_two_device_mesh():
+    """Satellite: per-shard top-k + global merge equals single-device top-k
+    (set equality under ties) on a 2x1 mesh for every registered engine.
+    Subprocess because the test session itself must see 1 CPU device."""
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=src + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", _TWO_DEVICE_SCRIPT],
+                         env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "2x1-OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# SearchSession front door
+# ---------------------------------------------------------------------------
+
+def test_session_chunks_and_maps_like_engine(data):
+    """Chunked session search == one-shot engine search, mapped through the
+    sample's global ids (−1 preserved)."""
+    vecs, queries = data
+    kept = (np.arange(vecs.shape[0]) * 2 + 100).astype(np.int64)
+    session = SearchSession(vecs, SearchConfig(engine="exact",
+                                               query_chunk=4),
+                            ids_map=kept)
+    eng = get_retrieval_engine("exact")
+    ref = np.asarray(eng.search(eng.build(jax.random.PRNGKey(0), vecs),
+                                queries, k=5))
+    assert (session.search(queries, k=5) == kept[ref]).all()
+
+
+def test_session_k_clamped_to_corpus(data):
+    vecs, queries = data
+    session = SearchSession(vecs[:4], SearchConfig(engine="exact"))
+    ids = session.search(queries, k=9)
+    assert ids.shape == (queries.shape[0], 9)
+    assert (ids[:, 4:] == -1).all()
+    assert (ids[:, :4] >= 0).all()
+
+
+def test_session_registry_error_ux(data):
+    vecs, _ = data
+    with pytest.raises(ValueError, match="registered engines"):
+        SearchSession(vecs, SearchConfig(engine="faiss"))
+    with pytest.raises(ValueError, match="registered backends"):
+        SearchSession(vecs, SearchConfig(backend="cuda"))
+    with pytest.raises(ValueError, match="mesh"):
+        SearchSession(vecs, SearchConfig(sharded=True))
+    with pytest.raises(ValueError, match="ids_map"):
+        SearchSession(vecs, ids_map=np.arange(3))
+
+
+def test_session_engine_opts_and_sharded_front_door(data):
+    vecs, queries = data
+    session = SearchSession(
+        vecs, SearchConfig(engine="ivfflat",
+                           engine_opts={"n_lists": 4, "nprobe": 4}))
+    assert session.engine.n_lists == 4
+    plain = session.search(queries, k=3)
+    sharded = SearchSession(
+        vecs, SearchConfig(engine="ivfflat", sharded=True,
+                           mesh=make_host_mesh(),
+                           engine_opts={"n_lists": 4, "nprobe": 4}))
+    assert (sharded.search(queries, k=3) == plain).all()
+
+
+def test_retrieval_frontend_routes_through_search_core(data):
+    """serve path: RetrievalFrontend.retrieve == SearchSession.search on
+    the same config (the online/offline unification of DESIGN.md §9)."""
+    from repro.serve.engine import RetrievalFrontend
+    vecs, queries = data
+    frontend = RetrievalFrontend(vecs, lambda q: jnp.asarray(q),
+                                 config=SearchConfig(engine="lsh"))
+    session = SearchSession(vecs, SearchConfig(engine="lsh"))
+    assert (frontend.retrieve(queries, k=4) ==
+            session.search(queries, k=4)).all()
+
+
+def test_grid_cells_identical_across_backends():
+    """eval path routes through the search core: with the deterministic
+    engines (exact/tfidf) every grid cell is identical under jnp and pallas
+    backends."""
+    from repro.data.synthetic import generate_corpus
+    from repro.eval import GridSpec, run_grid
+    corpus = generate_corpus(num_queries=64, qrels_per_query=6,
+                             num_topics=8, aux_fraction=0.3,
+                             vocab_size=256, seed=0)
+    spec = GridSpec(samplers=("full",), engines=("exact", "tfidf"),
+                    ks=(3,), metrics=("precision", "mrr"), max_queries=64)
+    r_jnp = run_grid(corpus, spec)
+    r_pal = run_grid(corpus, spec, search=SearchConfig(backend="pallas"))
+    assert r_jnp.cells.keys() == r_pal.cells.keys()
+    for cell, value in r_jnp.cells.items():
+        assert value == pytest.approx(r_pal.cells[cell], abs=1e-12), cell
