@@ -223,6 +223,77 @@ def bench_retrieval():
 
 
 # ---------------------------------------------------------------------------
+# Sampling core: staged graph-build / LP / per-draw timings per LP engine,
+# and the sweep-reuse speedup of SamplerSession (DESIGN.md §10) — the
+# draws-per-second win of cached labels vs the one-shot legacy entry point
+# ---------------------------------------------------------------------------
+
+def bench_sampling():
+    import itertools
+
+    from repro.core import QRelTable, WindTunnelConfig, run_windtunnel
+    from repro.core import engines as eng
+    from repro.core import sampling_core as sc
+    from repro.data.synthetic import generate_corpus
+
+    nq = 256 if SMOKE else 1280
+    corpus = generate_corpus(num_queries=nq, qrels_per_query=16,
+                             num_topics=32, aux_fraction=1.0, seed=0,
+                             vocab_size=1024)
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    n_ent, n_q = corpus.num_entities, corpus.num_queries
+    target = 0.15 * corpus.num_primary
+    engines = ("sort", "ell") if SMOKE else eng.available_engines()
+
+    us_graph = _timeit(lambda: sc._graph_stage(
+        qrels, num_queries=n_q, num_entities=n_ent, tau_quantile=0.5,
+        fanout=16))
+    row("sampling_graph_build", us_graph, f"N={n_ent} Q={n_q}")
+    edges, _ = sc._graph_stage(qrels, num_queries=n_q, num_entities=n_ent,
+                               tau_quantile=0.5, fanout=16)
+    for name in engines:
+        us_lp = _timeit(lambda name=name: sc._labels_stage(
+            edges, engine=name, num_entities=n_ent, max_degree=32,
+            rounds=5))
+        row(f"sampling_lp[{name}]", us_lp, f"N={n_ent} rounds=5 K=32")
+
+    for name in engines:
+        session = sc.SamplerSession(
+            qrels, num_queries=n_q, num_entities=n_ent,
+            spec=sc.SamplerSpec(engine=name, target_size=target, seed=0))
+        session.labels()                    # stage graph + LP up front
+        seeds = itertools.count()
+        us_draw = _timeit(
+            lambda: session.draw(seed=next(seeds)).entity_mask)
+        row(f"sampling_draw[{name}]", us_draw,
+            f"target={target:.0f} cached_labels=True")
+
+    # sweep-reuse speedup: K draws against one staged session vs K one-shot
+    # run_windtunnel calls (each re-paying graph build + LP)
+    k_draws = 4 if SMOKE else 8
+    cfg = WindTunnelConfig(target_size=target, seed=0, engine="ell")
+    session = sc.SamplerSession(qrels, num_queries=n_q, num_entities=n_ent,
+                                spec=sc.SamplerSpec.from_config(cfg))
+    session.labels()
+    seeds = itertools.count()
+
+    def cached_draws():
+        return [session.draw(seed=next(seeds)).entity_mask
+                for _ in range(k_draws)]
+
+    us_cached = _timeit(cached_draws, n=1)
+    wt_fn = jax.jit(lambda q: run_windtunnel(
+        q, num_queries=n_q, num_entities=n_ent,
+        config=cfg).sample.entity_mask)
+    us_full = _timeit(lambda: [wt_fn(qrels) for _ in range(k_draws)], n=1)
+    dps_cached = k_draws / (us_cached / 1e6)
+    dps_full = k_draws / (us_full / 1e6)
+    row("sampling_sweep_reuse", us_cached,
+        f"draws_per_s cached={dps_cached:.1f} full={dps_full:.1f} "
+        f"speedup={dps_cached / max(dps_full, 1e-9):.2f}x")
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -255,6 +326,7 @@ BENCHES = {
     "kernels": bench_kernels,
     "eval": bench_eval,
     "retrieval": bench_retrieval,
+    "sampling": bench_sampling,
     "roofline": bench_roofline,
 }
 

@@ -2,8 +2,12 @@
 experiment grid over full / uniform / WindTunnel samples through the
 trie-shared plan runner (repro.eval) and print the sample-fidelity report —
 metric deltas vs the full corpus plus Kendall-τ preservation of the engine
-ranking.  Persists results/table1.json (p@3 + rho_q per sampler, the
-Table I/II numbers) for the benchmark harness, plus the full grid.
+ranking.  Then runs a multi-resolution sweep through ONE
+:class:`~repro.core.sampling_core.SamplerSession` — graph build + label
+propagation staged once, every (size, seed) drawn against the cached labels
+— and reports the fidelity curve (p@3 / rho_q vs sample size).  Persists
+results/table1.json (p@3 + rho_q per sampler, the Table I/II numbers, plus
+the curve) for the benchmark harness, and the full grid.
 
   PYTHONPATH=src python examples/sample_and_evaluate.py [--fast]
 
@@ -25,6 +29,10 @@ def main():
     p.add_argument("--encoder-steps", type=int, default=800)
     p.add_argument("--full-grid", action="store_true",
                    help="also run k=10 (doubles the search stages)")
+    p.add_argument("--sweep-fracs", default="0.05,0.1,0.15,0.25",
+                   help="sample fractions for the multi-resolution sweep")
+    p.add_argument("--sweep-seeds", default="0,1,2",
+                   help="draw seeds for the multi-resolution sweep")
     p.add_argument("--out", default="results/table1.json")
     args = p.parse_args()
 
@@ -37,8 +45,11 @@ def main():
     print(f"corpus: {corpus.num_entities} entities "
           f"({corpus.num_primary} judged)")
 
+    import numpy as np
+    from repro.eval import tfidf_embedder
+
     if args.fast:
-        embedder = None  # runner default: tf-idf reference embedder
+        base_embedder = tfidf_embedder  # deterministic reference embedder
     else:
         from repro.retrieval.encoder import EncoderConfig, embed_corpus
         from repro.retrieval.experiment import train_encoder
@@ -48,17 +59,22 @@ def main():
         params, _ = train_encoder(corpus, enc, steps=args.encoder_steps,
                                   seed=0)
 
-        def embedder(c):
+        def base_embedder(c):
             return (embed_corpus(params, c.passage_tokens, enc),
                     embed_corpus(params, c.query_tokens, enc))
+
+    # embed ONCE; the grid's embed stage and the sweep section below share
+    # the cached vectors instead of re-running the encoder forward pass
+    ev, qv = base_embedder(corpus)
+    ev, qv = np.asarray(ev), np.asarray(qv)
 
     spec = GridSpec(samplers=("full", "uniform", "windtunnel"),
                     engines=("exact", "ivfflat", "lsh", "tfidf"),
                     ks=(3, 10) if args.full_grid else (3,),
                     metrics=("precision", "recall", "ndcg", "mrr"),
                     sample_frac=0.15, max_queries=512, seed=0)
-    result = run_grid(corpus, spec, embedder=embedder, query_chunk=128,
-                      verbose=True)
+    result = run_grid(corpus, spec, embedder=lambda c: (ev, qv),
+                      query_chunk=128, verbose=True)
 
     print("\nplan-trie stage counters:")
     print(result.trie.summary())
@@ -79,6 +95,44 @@ def main():
               f"rho_q={out[s]['rho_q']:.3f}")
     out["grid"] = result.to_json()
     out["fidelity"] = report.to_json()
+
+    # --- multi-resolution fidelity curve: one SamplerSession, one staged
+    # graph + LP, every (fraction, seed) drawn against the cached labels ---
+    import jax.numpy as jnp
+    from repro.core import QRelTable, SamplerSession, SamplerSpec
+    from repro.retrieval.experiment import evaluate_sample
+
+    fracs = tuple(float(x) for x in args.sweep_fracs.split(",") if x)
+    seeds = tuple(int(x) for x in args.sweep_seeds.split(",") if x)
+    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+    session = SamplerSession(qrels, num_queries=corpus.num_queries,
+                             num_entities=corpus.num_entities,
+                             spec=SamplerSpec(seed=0))
+    sweep = session.sweep(fracs, seeds)
+    full_p3 = out["full"]["p_at_3"]
+    print(f"\nmulti-resolution sweep ({len(fracs)} fractions x "
+          f"{len(seeds)} seeds, graph+LP staged once):")
+    curve = []
+    for frac in fracs:
+        rows = []
+        for seed in seeds:
+            mask = np.asarray(sweep.draws[(frac, seed)].entity_mask)
+            r = evaluate_sample("windtunnel", corpus, ev, qv, mask,
+                                seed=seed, engine="ivfflat",
+                                query_chunk=128, max_queries=512)
+            rows.append(r)
+        p3 = float(np.mean([r.p_at_3 for r in rows]))
+        rho = float(np.mean([r.rho_q for r in rows]))
+        n_ent = float(np.mean([r.n_entities for r in rows]))
+        curve.append({"frac": frac, "p_at_3": p3, "rho_q": rho,
+                      "n_entities": n_ent,
+                      "delta_p3_vs_full": p3 - full_p3})
+        print(f"  frac={frac:<6g} entities~{n_ent:7.0f} p@3={p3:.3f} "
+              f"(Δ vs full {p3 - full_p3:+.3f}) rho_q={rho:.3f}")
+    print("session stage counters:")
+    print(session.summary())
+    out["fidelity_curve"] = curve
+    out["sweep_stage_counts"] = sweep.to_json()["stage_counts"]
 
     os.makedirs(os.path.dirname(args.out), exist_ok=True)
     with open(args.out, "w") as f:

@@ -3,7 +3,8 @@
 GraphBuilder (Alg. 1) -> GraphSampler (Alg. 2, weighted label propagation +
 cluster sampling) -> CorpusReconstructor, plus the Yule-Simon community-
 structure analysis of §III-A. See DESIGN.md for the MapReduce->JAX mapping,
-the label-prop engine registry (§4) and the sharded dataflow (§5).
+the label-prop engine registry (§4), the sharded dataflow (§5) and the
+sampling-core session / strategy registry (§10).
 """
 from repro.core.engines import (LPEngine, available_engines, get_engine,
                                 register, run_engine)
@@ -14,9 +15,15 @@ from repro.core.label_prop import (ell_round, propagate, propagate_ell,
                                    edges_to_ell, sort_round)
 from repro.core.pipeline import (WindTunnelConfig, WindTunnelResult,
                                  run_uniform_baseline, run_windtunnel)
-from repro.core.reconstructor import query_density, reconstruct
+from repro.core.reconstructor import (associated_queries, query_density,
+                                      reconstruct)
 from repro.core.sampler import cluster_sample, uniform_sample
-from repro.core.sharded_pipeline import run_windtunnel_sharded
+from repro.core.samplers import (SamplerStrategy, available_samplers,
+                                 get_sampler, register_sampler)
+from repro.core.sampling_core import (SamplerDraw, SamplerSession,
+                                      SamplerSpec, SweepResult)
+from repro.core.sharded_pipeline import (run_windtunnel_sharded,
+                                         sharded_graph_and_labels)
 from repro.core.yule_simon import YuleSimonFit, fit_em
 
 __all__ = [
@@ -24,8 +31,12 @@ __all__ = [
     "symmetrize", "propagate", "propagate_ell", "edges_to_ell",
     "sort_round", "ell_round",
     "LPEngine", "available_engines", "get_engine", "register", "run_engine",
+    "SamplerStrategy", "available_samplers", "get_sampler",
+    "register_sampler",
+    "SamplerSpec", "SamplerSession", "SamplerDraw", "SweepResult",
     "WindTunnelConfig", "WindTunnelResult", "run_windtunnel",
-    "run_windtunnel_sharded", "run_uniform_baseline", "query_density",
+    "run_windtunnel_sharded", "sharded_graph_and_labels",
+    "run_uniform_baseline", "associated_queries", "query_density",
     "reconstruct", "cluster_sample", "uniform_sample", "YuleSimonFit",
     "fit_em",
 ]

@@ -1,26 +1,30 @@
 """WindTunnel pipeline orchestration: GraphBuilder -> GraphSampler ->
-CorpusReconstructor (paper Fig. 3), as one jit-able program.
+CorpusReconstructor (paper Fig. 3).
+
+The implementation lives in the sampling core (sampling_core.py, DESIGN.md
+§10): a ``SamplerSession`` stages graph build -> label propagation once and
+draws many samples against the cached labels.  ``run_windtunnel`` and
+``run_uniform_baseline`` below are the legacy one-shot entry points, kept
+as thin bit-compatible wrappers over a fresh session (one release of
+deprecation; see their docstrings).
 
 The GraphSampler execution strategy is resolved through the engine registry
 (engines.py, DESIGN.md §4): ``WindTunnelConfig.engine`` names any registered
 ``LPEngine`` — ``sort`` (sort/segment reference, unbounded degree), ``ell``
 (degree-capped dense ELL) or ``pallas`` (ELL layout with the per-round body
-in the Pallas TPU kernel, interpret mode off-TPU).  All engines share the
-same prepare → scan(round) → finalize driver, so the whole pipeline stays
-one XLA computation regardless of strategy.
+in the Pallas TPU kernel, interpret mode off-TPU).
 
-For the multi-device path see sharded_pipeline.run_windtunnel_sharded
-(DESIGN.md §5), which partitions this same dataflow across a mesh.
+For the multi-device path see sharded_pipeline (DESIGN.md §5) or
+``SamplerSpec(sharded=True, mesh=...)``, which partition the same dataflow
+across a mesh.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core import engines as eng
 from repro.core import graph_builder as gb
 from repro.core import reconstructor as rc
 from repro.core import sampler as sm
@@ -50,36 +54,35 @@ class WindTunnelResult(NamedTuple):
 def run_windtunnel(qrels: gb.QRelTable, *, num_queries: int,
                    num_entities: int, config: WindTunnelConfig
                    ) -> WindTunnelResult:
-    # --- GraphBuilder (Alg. 1) ---
-    edges = gb.build_affinity_graph(
-        qrels, num_queries=num_queries,
-        tau_quantile=config.tau_quantile, fanout=config.fanout)
-    degrees = gb.node_degrees(edges, num_entities)
+    """One-shot GraphBuilder -> GraphSampler -> CorpusReconstructor run.
 
-    # --- GraphSampler steps 1-3 (Alg. 2): label propagation ---
-    src, dst, w, valid = gb.symmetrize(edges)
-    engine = eng.get_engine(config.engine)
-    lp_res = eng.run_engine(engine, src, dst, w, valid,
-                            num_nodes=num_entities,
-                            max_degree=config.max_degree,
-                            rounds=config.lp_rounds)
-
-    # --- GraphSampler step 4: cluster sampling (universe = graph nodes) ---
-    key = jax.random.PRNGKey(config.seed)
-    sample = sm.cluster_sample(lp_res.labels, key,
-                               num_nodes=num_entities,
-                               target_size=config.target_size,
-                               eligible=degrees > 0)
-
-    # --- CorpusReconstructor ---
-    recon = rc.reconstruct(qrels, sample.entity_mask, num_queries=num_queries)
-    return WindTunnelResult(edges, lp_res.labels, lp_res.changes_per_round,
-                            sample, recon, degrees)
+    .. deprecated:: next release — thin wrapper over
+       ``sampling_core.SamplerSession``, kept one release for existing
+       callers.  The session amortizes graph build + label propagation
+       across many ``draw(target_size, seed)`` calls; this wrapper re-pays
+       them on every call.  Bit-compatible with the historical inline
+       pipeline (tests/test_sampling_core.py enforces parity).
+    """
+    from repro.core.sampling_core import SamplerSession, SamplerSpec
+    session = SamplerSession(
+        qrels, num_queries=num_queries, num_entities=num_entities,
+        spec=SamplerSpec.from_config(config, strategy="windtunnel"))
+    return session.result()
 
 
 def run_uniform_baseline(qrels: gb.QRelTable, *, num_queries: int,
                          num_entities: int, rate: float, seed: int = 0
                          ) -> rc.ReconstructedSample:
-    """The uniform-random baseline the paper compares against."""
-    mask = sm.uniform_sample(num_entities, jax.random.PRNGKey(seed), rate=rate)
-    return rc.reconstruct(qrels, mask, num_queries=num_queries)
+    """The uniform-random baseline the paper compares against.
+
+    .. deprecated:: next release — thin wrapper over
+       ``sampling_core.SamplerSession`` with the registered ``uniform``
+       strategy (``universe="all"`` reproduces the legacy whole-corpus
+       Bernoulli draw bit-exactly), kept one release for existing callers.
+    """
+    from repro.core.sampling_core import SamplerSession, SamplerSpec
+    session = SamplerSession(
+        qrels, num_queries=num_queries, num_entities=num_entities,
+        spec=SamplerSpec(strategy="uniform", seed=seed,
+                         strategy_opts={"universe": "all", "salt": 0}))
+    return session.draw(target_size=rate).reconstructed

@@ -4,10 +4,11 @@ inputs, emitting (Queries, Corpus, QRels) with the SAME SCHEMA as the input
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.graph_builder import QRelTable
 
@@ -36,6 +37,32 @@ def reconstruct(qrels: QRelTable, entity_mask: jnp.ndarray, *,
     query_mask = qm > 0
     sub = QRelTable(qrels.query_ids, qrels.entity_ids, qrels.scores, keep_row)
     return ReconstructedSample(sub, entity_mask, query_mask)
+
+
+def associated_queries(qrels: QRelTable, entity_mask, *, num_queries: int,
+                       max_queries: Optional[int] = None, seed: int = 0):
+    """Host-side mirror of :func:`reconstruct`'s query-association rule.
+
+    Returns ``(assoc bool[num_queries], qids i32[<=max_queries])``: queries
+    with >=1 relevant kept entity, plus a deterministic subsample of their
+    ids capped at ``max_queries`` (the eval grid's per-sample query budget).
+    ``assoc`` agrees bit-for-bit with ``reconstruct(...).query_mask``
+    (tests/test_sampling_core.py cross-checks the two), so eval-side query
+    selection and the reconstructor can never drift apart.
+    """
+    q = np.asarray(qrels.query_ids)
+    e = np.asarray(qrels.entity_ids)
+    v = np.asarray(qrels.valid)
+    mask = np.asarray(entity_mask)
+    num_entities = mask.shape[0]
+    assoc = np.zeros(num_queries, bool)
+    rows = v & mask[np.clip(e, 0, num_entities - 1)]
+    assoc[q[rows]] = True
+    qids = np.nonzero(assoc)[0]
+    if max_queries is not None and qids.size > max_queries:
+        rng = np.random.default_rng(seed)
+        qids = np.sort(rng.choice(qids, max_queries, replace=False))
+    return assoc, qids
 
 
 def query_density(qrels: QRelTable, entity_mask: jnp.ndarray,

@@ -33,8 +33,11 @@ def community_sizes(labels: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
 
 
 def _calibrate_scale(sizes: jnp.ndarray, n_total: jnp.ndarray,
-                     target: float, iters: int = 40) -> jnp.ndarray:
-    """Bisection for c with sum_L min(1, c*|L|/N) * |L| == target."""
+                     target, iters: int = 40) -> jnp.ndarray:
+    """Bisection for c with sum_L min(1, c*|L|/N) * |L| == target.
+
+    ``target`` may be a Python float or a traced f32 scalar (the sampling
+    core passes fraction-of-universe targets as traced values)."""
     sizes_f = sizes.astype(jnp.float32)
 
     def expected(c):
@@ -76,7 +79,7 @@ def cluster_sample(labels: jnp.ndarray, key: jax.Array, *,
     n_total = jnp.maximum(jnp.sum(eligible.astype(jnp.float32)), 1.0)
     p = sizes.astype(jnp.float32) / n_total          # the paper's |L|/N
     if target_size is not None:
-        c = _calibrate_scale(sizes, n_total, float(target_size))
+        c = _calibrate_scale(sizes, n_total, target_size)
         p = jnp.minimum(1.0, c * p)
     unif = jax.random.uniform(key, (num_nodes,))
     label_kept = (unif < p) & (sizes > 0)

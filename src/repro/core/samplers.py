@@ -1,0 +1,262 @@
+"""Sampling-strategy registry (DESIGN.md §10).
+
+The sampling side of WindTunnel mirrors the retrieval side: just as every
+vector index is a registered :class:`~repro.retrieval.engines.RetrievalEngine`
+behind one ``build``/``search`` protocol, every *sampling strategy* is a
+registered :class:`SamplerStrategy` behind one ``draw`` protocol.  The
+session front door (``sampling_core.SamplerSession``) stages the expensive
+shared state — affinity graph, label propagation — and hands each strategy
+only the pieces it declares it needs, so cheap baselines never pay for the
+graph and the grid runner / CLIs select strategies uniformly by name.
+
+A strategy implements the :class:`SamplerStrategy` protocol:
+
+  * ``needs_graph`` / ``needs_labels`` — which staged inputs ``draw``
+    consumes (node degrees from Alg. 1; LP labels from Alg. 2).  The
+    session builds each stage lazily, once, only if some draw needs it.
+  * ``draw(state, key, target_size)`` — pure, jit-able: produce the sampled
+    entity mask (and, for cluster sampling, the :class:`ClusterSample`
+    diagnostics).  ``target_size`` follows one convention everywhere: a
+    value in (0, 1] is a *fraction of the strategy's eligible universe*,
+    a value > 1 an absolute entity count, ``None`` the strategy default
+    (for ``windtunnel`` the paper's exact |L|/N rule).
+
+Registered strategies:
+
+  * ``windtunnel``        — cluster sampling of LP communities (the paper).
+  * ``uniform``           — Bernoulli over the judged entities (the paper's
+                            community-destroying baseline); ``universe="all"``
+                            reproduces the legacy ``run_uniform_baseline``
+                            draw over the whole corpus bit-exactly.
+  * ``full``              — keep everything (the no-sampling control).
+  * ``degree_stratified`` — NEW baseline between uniform and windtunnel:
+                            nodes are bucketed by ⌊log2(degree)⌋ and an
+                            equal keep *quota* is drawn per bucket, so the
+                            sample preserves the degree distribution
+                            exactly (not just in expectation) while still
+                            ignoring community structure.
+
+Strategies are frozen dataclasses, so callers tune knobs with
+``dataclasses.replace`` (or ``SamplerSpec.strategy_opts``) without mutating
+the registry's shared instance.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampler as sm
+from repro.core import segment_utils as su
+from repro.core.graph_builder import QRelTable
+
+
+class DrawState(NamedTuple):
+    """Staged session state a strategy may consume in ``draw``.
+
+    ``labels`` / ``degrees`` are only populated when the strategy declares
+    ``needs_labels`` / ``needs_graph`` — the session never builds a stage no
+    draw asked for.
+    """
+
+    qrels: QRelTable
+    num_entities: int
+    labels: Optional[jnp.ndarray]    # i32[N] LP labels (needs_labels)
+    degrees: Optional[jnp.ndarray]   # i32[N] affinity degrees (needs_graph)
+
+
+@runtime_checkable
+class SamplerStrategy(Protocol):
+    """A sampling strategy behind a uniform draw interface.
+
+    ``salt`` decorrelates strategies drawn at the same seed: the session
+    folds it into the PRNG key (``fold_in``) before ``draw``, so baselines
+    compared side-by-side in the eval grid never consume the same uniform
+    array (a shared array would make uniform and degree_stratified keep
+    near-identical entity sets).  ``salt = 0`` means the raw
+    ``PRNGKey(seed)`` — required where legacy entry points promise
+    bit-compatible draws (windtunnel; uniform via ``run_uniform_baseline``,
+    which pins ``salt=0`` through ``strategy_opts``).
+    """
+
+    name: str
+    needs_graph: bool
+    needs_labels: bool
+    salt: int
+
+    def draw(self, state: DrawState, key: jax.Array,
+             target_size: Optional[float]
+             ) -> Tuple[jnp.ndarray, Optional[sm.ClusterSample]]:
+        """(bool[N] entity mask, ClusterSample diagnostics or None)."""
+        ...
+
+
+_REGISTRY: Dict[str, SamplerStrategy] = {}
+
+
+def register_sampler(cls):
+    """Class decorator: instantiate and register a strategy under its name."""
+    strategy = cls()
+    _REGISTRY[strategy.name] = strategy
+    return cls
+
+
+def get_sampler(name: str) -> SamplerStrategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown sampler strategy {name!r}; registered strategies: "
+            f"{', '.join(available_samplers())}") from None
+
+
+def available_samplers() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def judged_entities(qrels: QRelTable, num_entities: int) -> jnp.ndarray:
+    """bool[N]: entities with >=1 valid QRel row (the paper's 'primary'
+    entities — the sampling universe of every judged-corpus baseline)."""
+    e = jnp.where(qrels.valid, qrels.entity_ids, num_entities)
+    cnt = jnp.zeros((num_entities,), jnp.int32).at[e].add(1, mode="drop")
+    return cnt > 0
+
+
+def _resolve_count(target_size, n_eligible):
+    """(0, 1) fraction-of-universe -> absolute count; >= 1 passes through
+    (strict, so a legacy absolute target of exactly 1 entity keeps its
+    historical meaning through the ``run_windtunnel`` wrapper)."""
+    if target_size is not None and target_size < 1.0:
+        return target_size * n_eligible
+    return target_size
+
+
+@register_sampler
+@dataclasses.dataclass(frozen=True)
+class FullSampler:
+    """Keep the whole corpus — the fidelity report's baseline row."""
+
+    name: str = "full"
+    needs_graph = False
+    needs_labels = False
+    salt = 0
+
+    def draw(self, state, key, target_size):
+        del key, target_size
+        return jnp.ones((state.num_entities,), bool), None
+
+
+@register_sampler
+@dataclasses.dataclass(frozen=True)
+class UniformSampler:
+    """Bernoulli entity sampling (paper §I-A) over a configurable universe.
+
+    ``universe="judged"`` (default) draws from the qrel'd entities — the
+    size-matched baseline the eval grid compares against.  ``universe="all"``
+    with ``salt=0`` draws from every corpus entity, reproducing the legacy
+    ``run_uniform_baseline`` mask bit-exactly for the same (rate, seed); the
+    registry default salt decorrelates grid draws from the windtunnel /
+    degree_stratified strategies at the same seed (the old runner's
+    ``seed + 7`` numpy decorrelation, now at the strategy level).
+    """
+
+    universe: str = "judged"
+    salt: int = 7
+    name: str = "uniform"
+    needs_graph = False
+    needs_labels = False
+
+    def draw(self, state, key, target_size):
+        if target_size is None:
+            raise ValueError("uniform sampling needs a target_size "
+                             "(fraction in (0, 1] or entity count)")
+        n = state.num_entities
+        if self.universe == "all":
+            eligible = None
+        elif self.universe == "judged":
+            eligible = judged_entities(state.qrels, n)
+        else:
+            raise ValueError(f"unknown uniform universe {self.universe!r}; "
+                             f"known universes: all, judged")
+        if target_size <= 1.0:
+            rate = target_size            # already a rate — no float detour
+        else:
+            n_elig = (jnp.float32(n) if eligible is None
+                      else jnp.sum(eligible.astype(jnp.float32)))
+            rate = target_size / jnp.maximum(n_elig, 1.0)
+        mask = jax.random.uniform(key, (n,)) < rate
+        if eligible is not None:
+            mask = mask & eligible
+        return mask, None
+
+
+@register_sampler
+@dataclasses.dataclass(frozen=True)
+class WindTunnelSampler:
+    """Cluster sampling of LP communities (Alg. 2 step 4) — a kept label
+    brings ALL of its entities, so community neighbourhoods survive intact."""
+
+    name: str = "windtunnel"
+    needs_graph = True
+    needs_labels = True
+    salt = 0          # raw PRNGKey(seed): legacy run_windtunnel bit-parity
+
+    def draw(self, state, key, target_size):
+        eligible = state.degrees > 0
+        target = _resolve_count(target_size,
+                                jnp.sum(eligible.astype(jnp.float32)))
+        sample = sm.cluster_sample(state.labels, key,
+                                   num_nodes=state.num_entities,
+                                   target_size=target, eligible=eligible)
+        return sample.entity_mask, sample
+
+
+@register_sampler
+@dataclasses.dataclass(frozen=True)
+class DegreeStratifiedSampler:
+    """Degree-stratified random sampling: nodes are bucketed by
+    ⌊log2(degree)⌋ (``num_strata`` buckets, top bucket open) and each bucket
+    keeps a ``rate × |bucket|`` quota of uniformly-ranked members.
+
+    Preserves the affinity-graph degree distribution exactly — the Fig. 4
+    power law a uniform Bernoulli draw only preserves in expectation — while
+    still cutting across communities, isolating how much of WindTunnel's
+    fidelity comes from community structure rather than degree structure.
+    """
+
+    num_strata: int = 8
+    salt: int = 13
+    name: str = "degree_stratified"
+    needs_graph = True
+    needs_labels = False
+
+    def draw(self, state, key, target_size):
+        if target_size is None:
+            raise ValueError("degree_stratified sampling needs a target_size "
+                             "(fraction in (0, 1] or entity count)")
+        deg = state.degrees
+        n = state.num_entities
+        eligible = deg > 0
+        n_elig = jnp.maximum(jnp.sum(eligible.astype(jnp.float32)), 1.0)
+        if target_size <= 1.0:
+            rate = jnp.float32(target_size)
+        else:
+            rate = jnp.clip(target_size / n_elig, 0.0, 1.0)
+        stratum = jnp.floor(
+            jnp.log2(jnp.maximum(deg, 1).astype(jnp.float32))).astype(jnp.int32)
+        stratum = jnp.clip(stratum, 0, self.num_strata - 1)
+        stratum = jnp.where(eligible, stratum, self.num_strata)  # drop bucket
+        counts = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), stratum,
+                                     num_segments=self.num_strata + 1)
+        quota = jnp.round(rate * counts.astype(jnp.float32)).astype(jnp.int32)
+        # random rank within each stratum: sort by (stratum, uniform draw)
+        u = jax.random.uniform(key, (n,))
+        (strat_s, _), (ids_s,) = su.sort_by(
+            (stratum, u), (jnp.arange(n, dtype=jnp.int32),))
+        rank = su.group_rank(su.run_starts(strat_s))
+        keep = (strat_s < self.num_strata) & \
+            (rank < quota[jnp.minimum(strat_s, self.num_strata - 1)])
+        mask = jnp.zeros((n,), bool).at[ids_s].set(keep)
+        return mask, None

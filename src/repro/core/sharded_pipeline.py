@@ -38,7 +38,6 @@ stage is operation-for-operation the single-device program.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
@@ -46,8 +45,6 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core import graph_builder as gb
 from repro.core import label_prop as lp
-from repro.core import reconstructor as rc
-from repro.core import sampler as sm
 from repro.core import segment_utils as su
 from repro.core.pipeline import WindTunnelConfig, WindTunnelResult
 from repro.distributed import collectives as coll
@@ -95,15 +92,19 @@ def _local_lp_round(nbr_labels, wgt, own, *, use_kernel: bool):
     return pallas_round_padded(nbr_labels, wgt, own)
 
 
-def run_windtunnel_sharded(qrels: gb.QRelTable, *, num_queries: int,
-                           num_entities: int, config: WindTunnelConfig,
-                           mesh: Mesh, axes: tuple = None
-                           ) -> WindTunnelResult:
-    """Mesh-partitioned ``run_windtunnel`` with identical semantics.
+def sharded_graph_and_labels(qrels: gb.QRelTable, *, num_queries: int,
+                             num_entities: int, config: WindTunnelConfig,
+                             mesh: Mesh, axes: tuple = None) -> tuple:
+    """Mesh-partitioned graph build + label propagation (stages 1-3 above):
+    one ``shard_map`` region, returning replicated ``(edges, labels,
+    changes_per_round)``.
 
-    ``axes`` defaults to the GNN sharding rule for node/query arrays
-    filtered to the mesh (production: ('data', 'model'); host mesh: the
-    same names with total size 1).
+    This is the expensive staged state of the sampling core
+    (``sampling_core.SamplerSession``): sampling + reconstruction are cheap
+    per-draw stages on the replicated outputs, identical to the
+    single-device path.  ``axes`` defaults to the GNN sharding rule for
+    node/query arrays filtered to the mesh (production: ('data', 'model');
+    host mesh: the same names with total size 1).
     """
     if config.engine not in ("ell", "pallas"):
         raise ValueError(
@@ -173,15 +174,28 @@ def run_windtunnel_sharded(qrels: gb.QRelTable, *, num_queries: int,
                    check_rep=False)
     edges, labels, changes = fn(routed.query_ids, routed.entity_ids,
                                 routed.scores, routed.valid)
-    labels = labels[:num_entities]
+    return edges, labels[:num_entities], changes
 
-    # ---- sampling + reconstruction on replicated outputs (keyed per
-    # label id -> mesh-shape independent given equal labels) ----
-    degrees = gb.node_degrees(edges, num_entities)
-    key = jax.random.PRNGKey(config.seed)
-    sample = sm.cluster_sample(labels, key, num_nodes=num_entities,
-                               target_size=config.target_size,
-                               eligible=degrees > 0)
-    recon = rc.reconstruct(qrels, sample.entity_mask,
-                           num_queries=num_queries)
-    return WindTunnelResult(edges, labels, changes, sample, recon, degrees)
+
+def run_windtunnel_sharded(qrels: gb.QRelTable, *, num_queries: int,
+                           num_entities: int, config: WindTunnelConfig,
+                           mesh: Mesh, axes: tuple = None
+                           ) -> WindTunnelResult:
+    """Mesh-partitioned ``run_windtunnel`` with identical semantics.
+
+    .. deprecated:: next release — thin wrapper over
+       ``sampling_core.SamplerSession`` (``SamplerSpec(sharded=True,
+       mesh=...)``), kept one release for existing callers.  The session
+       amortizes the shard_map graph + LP stages across many draws; this
+       wrapper re-stages them on every call.
+
+    Sampling + reconstruction run on the replicated outputs (keyed per
+    label id -> mesh-shape independent given equal labels), so a 1-device
+    mesh is bit-identical to ``run_windtunnel``.
+    """
+    from repro.core.sampling_core import SamplerSession, SamplerSpec
+    session = SamplerSession(
+        qrels, num_queries=num_queries, num_entities=num_entities,
+        spec=SamplerSpec.from_config(config, strategy="windtunnel",
+                                     sharded=True, mesh=mesh, axes=axes))
+    return session.result()

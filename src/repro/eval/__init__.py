@@ -18,6 +18,8 @@ package turns that claim into a measurable artifact:
 """
 from repro.eval.engines import (RetrievalEngine, available_retrieval_engines,
                                 get_retrieval_engine, register_retrieval_engine)
+from repro.core.samplers import get_sampler
+from repro.core.sampling_core import SamplerSession, SamplerSpec
 from repro.retrieval.backends import available_backends, get_backend
 from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.eval.fidelity import (FidelityReport, build_fidelity_report,
@@ -30,6 +32,7 @@ from repro.eval.runner import (GridResult, available_samplers, run_grid,
 __all__ = [
     "RetrievalEngine", "available_retrieval_engines", "get_retrieval_engine",
     "register_retrieval_engine",
+    "get_sampler", "SamplerSpec", "SamplerSession",
     "available_backends", "get_backend", "SearchConfig", "SearchSession",
     "GridSpec", "RunSpec", "PlanTrie", "expand_grid", "execute_plan",
     "GridResult", "run_grid", "tfidf_embedder", "available_samplers",

@@ -7,9 +7,14 @@
   corpus  — qrel lookup structures (pair set + per-query dict), built once.
   embed   — entity + query vectors from a pluggable embedder (default:
             the deterministic tf-idf reference embedder), built once.
-  sample  — entity mask from the sampler registry (full / uniform /
-            windtunnel), associated queries and query density, once per
-            sampler.
+  sample  — entity mask from one shared
+            :class:`~repro.core.sampling_core.SamplerSession` via the
+            strategy registry (core/samplers.py: full / uniform /
+            windtunnel / degree_stratified), associated queries and query
+            density, once per sampler.  All samplers draw from the SAME
+            session, so the affinity graph and label propagation are
+            staged at most once for the whole grid — the sampling-side
+            analogue of the trie's shared index stage.
   index   — a :class:`~repro.retrieval.search_core.SearchSession` over the
             sample's kept vectors, once per (sampler, engine): build-once
             through the search-core front door, so the grid exercises the
@@ -21,9 +26,10 @@
 
 ``run_grid(..., search=SearchConfig(backend="pallas", sharded=True,
 mesh=...))`` re-runs the whole grid on the kernel backend or a device mesh
-without touching any stage code.
+without touching any stage code; ``run_grid(..., sampler=SamplerSpec(...))``
+does the same for the sampling side (LP engine, sharded graph build, knobs).
 
-Samplers and metrics are registries too, so new sampling baselines or IR
+Samplers and metrics are registries, so new sampling baselines or IR
 measures extend the grid without touching this walker.
 """
 from __future__ import annotations
@@ -35,8 +41,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (QRelTable, WindTunnelConfig, query_density,
-                        run_windtunnel)
+from repro.core import QRelTable, associated_queries, query_density
+from repro.core.samplers import available_samplers, get_sampler
+from repro.core.sampling_core import SamplerSession, SamplerSpec
 from repro.data.synthetic import SyntheticCorpus
 from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
                               expand_grid)
@@ -45,60 +52,7 @@ from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
                                      qrel_dict, qrel_set, recall_at_k)
 from repro.retrieval.tfidf import tfidf_vectors
 
-# --------------------------------------------------------------------------
-# sampler registry: name -> fn(corpus, spec) -> Optional[bool mask] (None =
-# full corpus).  Samplers are independent of one another so the trie can
-# compute them in any order.
-# --------------------------------------------------------------------------
-
-_SAMPLERS: Dict[str, Callable[[SyntheticCorpus, GridSpec],
-                              Optional[np.ndarray]]] = {}
-
-
-def register_sampler(name: str):
-    def deco(fn):
-        _SAMPLERS[name] = fn
-        return fn
-    return deco
-
-
-def available_samplers() -> tuple:
-    return tuple(sorted(_SAMPLERS))
-
-
-@register_sampler("full")
-def _sample_full(corpus: SyntheticCorpus, spec: GridSpec):
-    return None
-
-
-@register_sampler("uniform")
-def _sample_uniform(corpus: SyntheticCorpus, spec: GridSpec):
-    """Uniform over the judged entities at the grid's sample fraction —
-    the paper's community-destroying baseline.
-
-    Samplers are independent trie nodes, so this draws at ``sample_frac``
-    rather than at the WindTunnel sample's *realized* rate; the windtunnel
-    sampler's target_size calibration aims at the same fraction, keeping
-    the two approximately (not exactly) size-matched.  Realized sizes are
-    reported per sampler in ``GridResult.sampler_stats`` — check them
-    before attributing small metric deltas to the sampling strategy."""
-    rng = np.random.default_rng(spec.seed + 7)
-    mask = np.zeros(corpus.num_entities, bool)
-    mask[:corpus.num_primary] = rng.random(corpus.num_primary) < \
-        spec.sample_frac
-    return mask
-
-
-@register_sampler("windtunnel")
-def _sample_windtunnel(corpus: SyntheticCorpus, spec: GridSpec):
-    cfg = WindTunnelConfig(
-        tau_quantile=0.5, fanout=16, lp_rounds=5,
-        target_size=spec.sample_frac * corpus.num_primary, seed=spec.seed)
-    qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
-    res = jax.jit(lambda q: run_windtunnel(
-        q, num_queries=corpus.num_queries,
-        num_entities=corpus.num_entities, config=cfg))(qrels)
-    return np.asarray(res.sample.entity_mask)
+__all__ = ["GridResult", "run_grid", "tfidf_embedder", "available_samplers"]
 
 
 # --------------------------------------------------------------------------
@@ -126,23 +80,6 @@ def tfidf_embedder(corpus: SyntheticCorpus):
     return ev, qv
 
 
-def _associated_queries(corpus: SyntheticCorpus, mask: np.ndarray,
-                        max_queries: int, seed: int):
-    """Queries with >=1 relevant kept entity, subsampled to ``max_queries``
-    (the reconstructor's query-association rule, host-side)."""
-    q = np.asarray(corpus.qrels.query_ids)
-    e = np.asarray(corpus.qrels.entity_ids)
-    v = np.asarray(corpus.qrels.valid)
-    assoc = np.zeros(corpus.num_queries, bool)
-    rows = v & mask[np.clip(e, 0, corpus.num_entities - 1)]
-    assoc[q[rows]] = True
-    qids = np.nonzero(assoc)[0]
-    if qids.size > max_queries:
-        rng = np.random.default_rng(seed)
-        qids = np.sort(rng.choice(qids, max_queries, replace=False))
-    return assoc, qids
-
-
 @dataclasses.dataclass
 class GridResult:
     spec: GridSpec
@@ -166,15 +103,35 @@ class GridResult:
 def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
              embedder: Optional[Callable] = None, query_chunk: int = 256,
              search: Optional[SearchConfig] = None,
+             sampler: Optional[SamplerSpec] = None,
              verbose: bool = False) -> GridResult:
     """Execute every cell of ``spec`` over ``corpus`` via the plan trie.
 
     ``search`` configures the search core (backend / sharded / mesh) for
-    the index+search stages; the engine axis always comes from the grid.
+    the index+search stages; ``sampler`` configures the sampling core (LP
+    engine / sharded graph build / knobs) for the sample stage.  The
+    engine and sampler axes always come from the grid; the grid's
+    ``sample_frac``/``seed`` override the sampler spec's defaults so every
+    strategy is size-matched at the same fraction of the judged corpus.
     """
     embedder = embedder or tfidf_embedder
     search = search or SearchConfig()
+    sampler_spec = dataclasses.replace(
+        sampler or SamplerSpec(),
+        target_size=spec.sample_frac * corpus.num_primary, seed=spec.seed)
     sampler_stats: Dict[str, Dict[str, float]] = {}
+
+    session_box: list = []
+
+    def _session() -> SamplerSession:
+        """One SamplerSession shared by every sampler in the grid: the
+        affinity graph and LP labels are staged at most once per run_grid."""
+        if not session_box:
+            qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
+            session_box.append(SamplerSession(
+                qrels, num_queries=corpus.num_queries,
+                num_entities=corpus.num_entities, spec=sampler_spec))
+        return session_box[0]
 
     def stage_corpus(parent: Any, run: RunSpec) -> dict:
         del parent, run
@@ -188,18 +145,13 @@ def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
         return {**ctx, "ev": np.asarray(ev), "qv": np.asarray(qv)}
 
     def stage_sample(ctx: dict, run: RunSpec) -> dict:
-        try:
-            sampler = _SAMPLERS[run.sampler]
-        except KeyError:
-            raise ValueError(
-                f"unknown sampler {run.sampler!r}; registered samplers: "
-                f"{', '.join(available_samplers())}") from None
-        mask = sampler(corpus, spec)
-        mask = (np.ones(corpus.num_entities, bool) if mask is None
-                else np.asarray(mask))
+        get_sampler(run.sampler)   # registry error UX before any staging
+        draw = _session().draw(strategy=run.sampler)
+        mask = np.asarray(draw.entity_mask)
         kept_ids = np.nonzero(mask)[0]
-        assoc, qids = _associated_queries(corpus, mask, spec.max_queries,
-                                          spec.seed)
+        assoc, qids = associated_queries(
+            corpus.qrels, mask, num_queries=corpus.num_queries,
+            max_queries=spec.max_queries, seed=spec.seed)
         rho = float(query_density(
             QRelTable(*(jnp.asarray(x) for x in corpus.qrels)),
             jnp.asarray(mask), jnp.asarray(assoc),

@@ -18,7 +18,8 @@ from repro.data.synthetic import generate_corpus
 from repro.eval import (GridSpec, SearchConfig, available_backends,
                         available_retrieval_engines, available_samplers,
                         build_fidelity_report, format_fidelity_report,
-                        get_backend, get_retrieval_engine, run_grid)
+                        get_backend, get_retrieval_engine, get_sampler,
+                        run_grid)
 from repro.launch.mesh import parse_mesh
 
 GRIDS = {
@@ -86,8 +87,11 @@ def main(argv=None):
     overrides["seed"] = args.seed
     spec = dataclasses.replace(spec, **overrides)
 
-    # unknown engine/backend names fail here with the registry's error
-    # message (the core/engines.py UX), before any corpus work
+    # unknown sampler/engine/backend names fail here with the registry's
+    # error message (the core/engines.py UX), before any corpus work —
+    # the same error contract as launch/sample.py --strategy
+    for name in spec.samplers:
+        get_sampler(name)
     for name in spec.engines:
         get_retrieval_engine(name)
     get_backend(args.backend)

@@ -1,11 +1,22 @@
-"""WindTunnel sampling CLI — the paper's end-to-end pipeline.
+"""WindTunnel sampling CLI — the paper's end-to-end pipeline through the
+sampling-core front door (DESIGN.md §10).
 
   PYTHONPATH=src python -m repro.launch.sample --queries 1280 --target-frac 0.15 \
       --out results/sample
 
-Generates (or loads) a corpus, runs GraphBuilder -> GraphSampler ->
-CorpusReconstructor, reports community statistics and the Yule-Simon fit,
-and writes the sampled qrel table + entity mask.
+  # size x seed sweep: graph build + label propagation run ONCE, every
+  # (size, seed) draw reuses the cached labels (sizes <=1 are fractions
+  # of the eligible universe, >1 absolute entity counts)
+  PYTHONPATH=src python -m repro.launch.sample --sweep-sizes 0.05,0.1,0.15 \
+      --sweep-seeds 0,1,2
+
+  # baselines share the same session (and staged graph, when they need it)
+  PYTHONPATH=src python -m repro.launch.sample --strategy degree_stratified
+
+Generates (or loads) a corpus, stages GraphBuilder -> GraphSampler state in
+a :class:`~repro.core.sampling_core.SamplerSession`, draws the sample(s),
+reports community statistics and the Yule-Simon fit, and writes the sampled
+qrel table + entity mask.
 """
 from __future__ import annotations
 
@@ -13,15 +24,23 @@ import argparse
 import json
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (QRelTable, WindTunnelConfig, available_engines,
-                        fit_em, run_windtunnel, run_windtunnel_sharded)
+from repro.core import (QRelTable, SamplerSession, SamplerSpec,
+                        available_engines, available_samplers, fit_em,
+                        get_sampler)
 from repro.core.engines import get_engine
 from repro.data.synthetic import generate_corpus
 from repro.launch.mesh import parse_mesh
+
+
+def _csv_floats(s):
+    return tuple(float(x) for x in s.split(",") if x)
+
+
+def _csv_ints(s):
+    return tuple(int(x) for x in s.split(",") if x)
 
 
 def main(argv=None):
@@ -30,6 +49,9 @@ def main(argv=None):
     p.add_argument("--qrels-per-query", type=int, default=32)
     p.add_argument("--topics", type=int, default=96)
     p.add_argument("--aux-fraction", type=float, default=2.0)
+    p.add_argument("--strategy", default="windtunnel",
+                   help="sampling strategy from the registry "
+                        "(core/samplers.py): " + ",".join(available_samplers()))
     p.add_argument("--target-frac", type=float, default=0.15)
     p.add_argument("--tau-quantile", type=float, default=0.5)
     p.add_argument("--fanout", type=int, default=16)
@@ -38,17 +60,26 @@ def main(argv=None):
                    help="label-prop engine from the registry "
                         "(core/engines.py): " + ",".join(available_engines()))
     p.add_argument("--sharded", action="store_true",
-                   help="run the mesh-partitioned pipeline "
+                   help="run the mesh-partitioned graph+LP stages "
                         "(core/sharded_pipeline.py; requires an ELL-family "
                         "engine)")
     p.add_argument("--mesh", default="host", choices=["host", "auto"],
                    help="mesh for --sharded: 1-device host mesh or all "
                         "local devices on the data axis")
+    p.add_argument("--sweep-sizes", default=None, metavar="S1,S2,...",
+                   help="comma list of target sizes (<=1: fraction of the "
+                        "eligible universe; >1: entity count); runs "
+                        "session.sweep against ONE staged graph+LP")
+    p.add_argument("--sweep-seeds", default=None, metavar="R1,R2,...",
+                   help="comma list of draw seeds for --sweep-sizes "
+                        "(default: just --seed)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
     args = p.parse_args(argv)
-    get_engine(args.engine)        # unknown names fail with the registry's
-                                   # error message before any corpus work
+    # unknown names fail with the registry's error message before any
+    # corpus work — the same error contract as launch/evaluate.py
+    get_sampler(args.strategy)
+    get_engine(args.engine)
     if args.sharded and args.engine == "sort":
         p.error("--sharded requires an ELL-family engine; "
                 "pass --engine ell or --engine pallas")
@@ -61,44 +92,75 @@ def main(argv=None):
           f"({corpus.num_primary} judged), {corpus.num_queries} queries")
 
     qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
-    cfg = WindTunnelConfig(
+    spec = SamplerSpec(
+        strategy=args.strategy, engine=args.engine,
         tau_quantile=args.tau_quantile, fanout=args.fanout,
-        lp_rounds=args.lp_rounds, engine=args.engine,
-        target_size=args.target_frac * corpus.num_primary, seed=args.seed)
+        lp_rounds=args.lp_rounds,
+        target_size=args.target_frac * corpus.num_primary, seed=args.seed,
+        sharded=args.sharded,
+        mesh=parse_mesh(args.mesh) if args.sharded else None)
+    session = SamplerSession(qrels, num_queries=corpus.num_queries,
+                             num_entities=corpus.num_entities, spec=spec)
     if args.sharded:
-        mesh = parse_mesh(args.mesh)
-        print(f"sharded pipeline on mesh {dict(mesh.shape)} "
-              f"(engine={cfg.engine})")
-        res = run_windtunnel_sharded(
-            qrels, num_queries=corpus.num_queries,
-            num_entities=corpus.num_entities, config=cfg, mesh=mesh)
+        print(f"sharded graph+LP on mesh {dict(spec.mesh.shape)} "
+              f"(engine={spec.engine})")
+
+    stats = {}
+    if args.sweep_sizes:
+        sizes = _csv_floats(args.sweep_sizes)
+        seeds = (_csv_ints(args.sweep_seeds) if args.sweep_seeds
+                 else (args.seed,))
+        sweep = session.sweep(sizes, seeds)
+        print(f"sweep: {len(sizes)} sizes x {len(seeds)} seeds "
+              f"(strategy={sweep.strategy})")
+        for (size, seed), draw in sorted(sweep.draws.items()):
+            mask = np.asarray(draw.entity_mask)
+            print(f"  size={size:<10g} seed={seed:<3d} -> "
+                  f"{int(mask.sum())} entities, "
+                  f"{int(draw.reconstructed.num_queries)} queries")
+        print("session stage counters (graph+LP staged once per sweep):")
+        print(session.summary())
+        stats["sweep"] = sweep.to_json()
+        mask = np.asarray(sweep.draws[(sweep.sizes[0],
+                                       sweep.seeds[0])].entity_mask)
+        recon_valid = np.asarray(
+            sweep.draws[(sweep.sizes[0], sweep.seeds[0])]
+            .reconstructed.qrels.valid)
+        labels = (np.asarray(session.labels()[0])
+                  if get_sampler(args.strategy).needs_labels
+                  else np.zeros(corpus.num_entities, np.int32))
     else:
-        res = jax.jit(lambda q: run_windtunnel(
-            q, num_queries=corpus.num_queries,
-            num_entities=corpus.num_entities, config=cfg))(qrels)
+        draw = session.draw()
+        mask = np.asarray(draw.entity_mask)
+        recon_valid = np.asarray(draw.reconstructed.qrels.valid)
+        strat = get_sampler(args.strategy)
+        labels = np.zeros(corpus.num_entities, np.int32)
+        if strat.needs_graph:
+            edges, degrees = session.graph()
+            deg = np.asarray(degrees)
+            fit = fit_em(jnp.asarray(deg[deg > 0]), max_iters=300)
+            print(f"affinity graph: {int(edges.num_valid)} edges; "
+                  f"degree-law gamma = {float(fit.gamma):.3f} "
+                  f"(se {float(fit.stderr):.2e})")
+            stats["gamma"] = float(fit.gamma)
+        if strat.needs_labels:
+            labels_arr, changes = session.labels()
+            labels = np.asarray(labels_arr)
+            sizes_arr = np.asarray(draw.sample.community_sizes)
+            n_comm = int((sizes_arr > 0).sum())
+            print(f"{n_comm} communities; LP changes/round = "
+                  f"{np.asarray(changes).tolist()}")
+            stats["communities"] = n_comm
+        print(f"sample[{args.strategy}]: {int(mask.sum())} entities, "
+              f"{int(draw.reconstructed.num_queries)} associated queries")
 
-    mask = np.asarray(res.sample.entity_mask)
-    labels = np.asarray(res.labels)
-    deg = np.asarray(res.degrees)
-    sizes = np.asarray(res.sample.community_sizes)
-    n_comm = int((sizes > 0).sum())
-    fit = fit_em(jnp.asarray(deg[deg > 0]), max_iters=300)
-    print(f"affinity graph: {int(res.edges.num_valid)} edges, "
-          f"{n_comm} communities; degree-law gamma = {float(fit.gamma):.3f} "
-          f"(se {float(fit.stderr):.2e})")
-    print(f"sample: {int(mask.sum())} entities, "
-          f"{int(res.reconstructed.num_queries)} associated queries; "
-          f"LP changes/round = {np.asarray(res.changes_per_round).tolist()}")
-
+    stats["entities"] = int(mask.sum())
     if args.out:
         os.makedirs(args.out, exist_ok=True)
         np.savez(os.path.join(args.out, "sample.npz"),
-                 entity_mask=mask, labels=labels,
-                 qrel_valid=np.asarray(res.reconstructed.qrels.valid))
+                 entity_mask=mask, labels=labels, qrel_valid=recon_valid)
         with open(os.path.join(args.out, "stats.json"), "w") as f:
-            json.dump({"entities": int(mask.sum()),
-                       "communities": n_comm,
-                       "gamma": float(fit.gamma)}, f, indent=2)
+            json.dump(stats, f, indent=2)
         print(f"wrote {args.out}/sample.npz")
 
 
