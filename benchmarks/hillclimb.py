@@ -16,8 +16,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax  # noqa: E402
 
+from repro.kernels.tuning import compiled_roofline  # noqa: E402
 from repro.launch.cells import build_cell  # noqa: E402
-from repro.launch.dryrun import collective_bytes, HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+from repro.launch.dryrun import collective_bytes, ICI_BW  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 
 
@@ -26,15 +27,14 @@ def measure(arch, shape, mesh, overrides=None):
     cell = build_cell(arch, shape, mesh, overrides=overrides)
     with mesh:
         comp = cell.fn.lower(*cell.args).compile()
-    cost = comp.cost_analysis()
-    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
     coll = collective_bytes(comp.as_text())
     mem = comp.memory_analysis()
     return {
         "overrides": overrides or {},
         "compile_s": round(time.time() - t0, 1),
-        "compute_ms": float(cost.get("flops", 0)) / PEAK_FLOPS_BF16 * 1e3,
-        "memory_ms": float(cost.get("bytes accessed", 0)) / HBM_BW * 1e3,
+        # compute/memory roofline terms shared with the kernel autotuner
+        # (repro.kernels.tuning scores block candidates the same way)
+        **compiled_roofline(comp),
         "collective_ms": sum(coll.values()) / ICI_BW * 1e3,
         "collectives": coll,
         "temp_gib": mem.temp_size_in_bytes / 2**30,

@@ -5,12 +5,14 @@ CSV rows (derived = the table's headline number).
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig4,table1
   PYTHONPATH=src python -m benchmarks.run --only kernels --json results/bench
+  PYTHONPATH=src python -m benchmarks.run --autotune --only retrieval --json results/bench
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
+import platform
 import sys
 import time
 
@@ -26,6 +28,21 @@ ROWS = []
 def row(name, us, derived):
     ROWS.append((name, us, derived))
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def bench_meta() -> dict:
+    """Host/device/backend provenance stamped into every BENCH_*.json —
+    perf trajectories across machines are uninterpretable without it."""
+    dev = jax.devices()[0]
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "smoke": SMOKE,
+    }
 
 
 def _timeit(fn, n=3):
@@ -198,6 +215,8 @@ def bench_eval():
 # ---------------------------------------------------------------------------
 
 def bench_retrieval():
+    from repro.eval.fidelity import backend_recall_curve
+    from repro.kernels import tuning
     from repro.retrieval.backends import available_backends
     from repro.retrieval.engines import available_retrieval_engines
     from repro.retrieval.search_core import SearchConfig, SearchSession
@@ -207,6 +226,7 @@ def bench_retrieval():
     engines = (("exact", "lsh") if SMOKE
                else available_retrieval_engines())
     queries = jax.random.normal(jax.random.PRNGKey(1), (q_n, d))
+    us_by = {}                         # (engine, backend, n) -> us
     for n in sizes:
         vecs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
         for engine in engines:
@@ -218,8 +238,55 @@ def bench_retrieval():
                 jax.block_until_ready(session.index)
                 us_build = (time.time() - t0) * 1e6
                 us = _timeit(lambda: session.search(queries, k=k))
+                us_by[(engine, backend, n)] = us
                 row(f"retrieval[{engine}|{backend}|N={n}]", us,
                     f"build_us={us_build:.0f} Q={q_n} k={k}")
+
+    # int8-vs-f32 speedup column per engine x size (same SearchSession rows)
+    for n in sizes:
+        for engine in engines:
+            f32 = us_by[(engine, "jnp", n)]
+            i8 = us_by[(engine, "int8", n)]
+            row(f"retrieval_int8_vs_f32[{engine}|N={n}]", i8,
+                f"f32_us={f32:.1f} speedup={f32 / max(i8, 1e-9):.2f}x")
+
+    # tuned-vs-default speedup column per kernel primitive x size: explicit
+    # default blocks vs the autotuner table's resolution (explicit kwargs on
+    # both sides, so stale jit caches can't blur the comparison)
+    from repro.kernels.lsh_hamming.ops import hamming_topk
+    from repro.kernels.topk_scoring.ops import topk_scores, topk_scores_int8
+    from repro.retrieval.lsh import build_lsh, encode
+    for n in sizes:
+        vecs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+        lsh = build_lsh(jax.random.PRNGKey(0), vecs, n_bits=128)
+        qcodes = encode(lsh.proj, queries)
+        q8 = jnp.clip(jnp.round(queries * 10), -127, 127).astype(jnp.int8)
+        c8 = jnp.clip(jnp.round(vecs * 10), -127, 127).astype(jnp.int8)
+        cases = {
+            ("topk", "float32"):
+                lambda blk: topk_scores(queries, vecs, k=k, **blk),
+            ("topk", "int8"):
+                lambda blk: topk_scores_int8(q8, c8, k=k, **blk),
+            ("hamming_topk", "int32"):
+                lambda blk: hamming_topk(qcodes, lsh.codes, k=k, **blk),
+        }
+        for (kernel, dt), fn in cases.items():
+            default = dict(tuning.DEFAULTS[kernel])
+            tuned = tuning.resolve(kernel, n=n, dtype=dt)
+            us_def = _timeit(lambda: fn(default))
+            us_tun = _timeit(lambda: fn(tuned))
+            row(f"retrieval_tuned_vs_default[{kernel}|{dt}|N={n}]", us_tun,
+                f"default_us={us_def:.1f} tuned={tuned} "
+                f"speedup={us_def / max(us_tun, 1e-9):.2f}x")
+
+    # int8 recall-vs-speed curve at the largest size (recall@k vs jnp exact)
+    n = sizes[-1]
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    for r in backend_recall_curve(vecs, queries, k=k,
+                                  rerank_factors=(1, 2, 4, 8)):
+        rf = "-" if r["rerank_factor"] is None else r["rerank_factor"]
+        row(f"retrieval_recall[{r['backend']}|rf={rf}|N={n}]",
+            r["us_per_call"], f"recall@{k}={r['recall_at_k']:.4f}")
 
 
 # ---------------------------------------------------------------------------
@@ -333,6 +400,20 @@ BENCHES = {
 SMOKE = False
 
 
+def run_autotune() -> None:
+    """Regenerate results/tuned_kernels.json and activate it for the
+    benches that follow (the README 'make it fast' entry point).  Smoke
+    mode tunes a reduced cell set so CI stays fast."""
+    from repro.kernels import tuning
+    if SMOKE:
+        table = tuning.autotune(buckets=("le1024", "le4096"), max_evals=4,
+                                wall_iters=0)
+    else:
+        table = tuning.autotune(max_evals=12, wall_iters=1)
+    row("autotune", 0.0,
+        f"entries={len(table.entries)} -> {tuning.RESULTS_TABLE_PATH}")
+
+
 def main() -> None:
     global SMOKE
     p = argparse.ArgumentParser()
@@ -340,6 +421,10 @@ def main() -> None:
                    help="comma-separated subset of " + ",".join(BENCHES))
     p.add_argument("--smoke", action="store_true",
                    help="reduced sweep (CI: smallest corpus, 2 engines)")
+    p.add_argument("--autotune", action="store_true",
+                   help="regenerate results/tuned_kernels.json with the "
+                        "kernel autotuner (kernels/tuning.py) before "
+                        "running the benches, and bench with it active")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="directory to persist each section's rows as "
                         "BENCH_<name>.json (the perf trajectory record)")
@@ -347,6 +432,9 @@ def main() -> None:
     SMOKE = args.smoke
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
+    if args.autotune:
+        run_autotune()
+    meta = bench_meta()
     for n in names:
         start = len(ROWS)
         BENCHES[n]()
@@ -354,8 +442,10 @@ def main() -> None:
             os.makedirs(args.json, exist_ok=True)
             out = os.path.join(args.json, f"BENCH_{n}.json")
             with open(out, "w") as f:
-                json.dump([{"name": r[0], "us_per_call": r[1],
-                            "derived": r[2]} for r in ROWS[start:]],
+                json.dump({"meta": meta,
+                           "rows": [{"name": r[0], "us_per_call": r[1],
+                                     "derived": r[2]}
+                                    for r in ROWS[start:]]},
                           f, indent=2)
             print(f"# wrote {out}", flush=True)
 

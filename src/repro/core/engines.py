@@ -160,10 +160,13 @@ class PallasEngine:
     block runs in Pallas.  Off-TPU the kernel executes in interpret mode
     (kernels/label_prop/ops.py checks the backend), so CPU tests exercise
     the exact same code path.
+
+    ``block_n = None`` defers the node block to the autotuner table
+    (kernels/tuning.py) — set a concrete int to pin it.
     """
 
     name = "pallas"
-    block_n = 256
+    block_n = None
 
     def prepare(self, src, dst, w, valid, *, num_nodes: int,
                 max_degree: int) -> _EllState:

@@ -22,7 +22,8 @@ from repro.core.samplers import get_sampler
 from repro.core.sampling_core import SamplerSession, SamplerSpec
 from repro.retrieval.backends import available_backends, get_backend
 from repro.retrieval.search_core import SearchConfig, SearchSession
-from repro.eval.fidelity import (FidelityReport, build_fidelity_report,
+from repro.eval.fidelity import (FidelityReport, backend_recall_curve,
+                                 build_fidelity_report, format_backend_curve,
                                  format_fidelity_report, kendall_tau)
 from repro.eval.plans import (GridSpec, PlanTrie, RunSpec, execute_plan,
                               expand_grid)
@@ -37,5 +38,5 @@ __all__ = [
     "GridSpec", "RunSpec", "PlanTrie", "expand_grid", "execute_plan",
     "GridResult", "run_grid", "tfidf_embedder", "available_samplers",
     "FidelityReport", "build_fidelity_report", "format_fidelity_report",
-    "kendall_tau",
+    "kendall_tau", "backend_recall_curve", "format_backend_curve",
 ]

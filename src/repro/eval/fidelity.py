@@ -11,11 +11,18 @@ Two views on a finished :class:`~repro.eval.runner.GridResult`:
   and the full corpus's, plus whether the *winning* engine agrees.  This is
   the question the paper's §I poses: can the cheap sample pick the same
   winning system as the full corpus would?
+
+Plus one backend-level view, :func:`backend_recall_curve`: recall@k vs
+wall-clock of every scoring backend against the exact ``jnp`` oracle on
+the same vectors — for the ``int8`` backend swept over ``rerank_factor``,
+so the quantized backend's recall-vs-speed trade is part of the report
+(the engine-ranking question, one layer down).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+import time
+from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
@@ -129,6 +136,63 @@ def build_fidelity_report(cells: Dict[Tuple[str, str, int, str], float],
 
     return FidelityReport(baseline, cell_deltas, mean_abs_delta, tau,
                           winners, winner_agreement)
+
+
+def backend_recall_curve(corpus_vecs, queries, *, k: int = 10,
+                         rerank_factors: Sequence[int] = (1, 2, 4, 8),
+                         timing_iters: int = 3) -> List[dict]:
+    """Recall@k + us/query-batch of every scoring backend vs the exact
+    ``jnp`` oracle, the ``int8`` backend swept over ``rerank_factor``
+    (its recall-vs-speed knob).  Corpus preparation (quantization) is
+    excluded from the timing — it is a build-time cost.
+
+    Returns one row dict per point: ``{"backend", "rerank_factor",
+    "recall_at_k", "us_per_call"}`` (rerank_factor is None for the float
+    backends, whose recall is 1.0 by construction/parity)."""
+    import jax
+    from repro.retrieval.backends import available_backends, get_backend
+
+    k = min(k, int(corpus_vecs.shape[0]))
+    exact = np.asarray(get_backend("jnp").topk(queries, corpus_vecs, k=k)[1])
+
+    def _point(backend, label, rf):
+        prepared = backend.prepare_corpus(corpus_vecs)
+        ids = np.asarray(backend.topk(queries, prepared, k=k)[1])
+        hits = [len(set(a.tolist()) & set(b.tolist())) / max(k, 1)
+                for a, b in zip(ids, exact)]
+        fn = lambda: backend.topk(queries, prepared, k=k)[1]
+        jax.block_until_ready(fn())
+        t0 = time.time()
+        for _ in range(timing_iters):
+            jax.block_until_ready(fn())
+        us = (time.time() - t0) / timing_iters * 1e6
+        return {"backend": label, "rerank_factor": rf,
+                "recall_at_k": float(np.mean(hits)),
+                "us_per_call": float(us)}
+
+    rows = []
+    for name in available_backends():
+        backend = get_backend(name)
+        if name == "int8":
+            for rf in rerank_factors:
+                rows.append(_point(
+                    dataclasses.replace(backend, rerank_factor=rf),
+                    name, rf))
+        else:
+            rows.append(_point(backend, name, None))
+    return rows
+
+
+def format_backend_curve(rows: Sequence[dict], *, k: int = 10) -> str:
+    """Human-readable recall-vs-speed block for the fidelity output."""
+    lines = [f"backend recall-vs-speed (recall@{k} vs jnp exact)",
+             f"  {'backend':<10s} {'rerank':>6s} {'recall':>8s} "
+             f"{'us/call':>10s}"]
+    for r in rows:
+        rf = "-" if r["rerank_factor"] is None else str(r["rerank_factor"])
+        lines.append(f"  {r['backend']:<10s} {rf:>6s} "
+                     f"{r['recall_at_k']:8.4f} {r['us_per_call']:10.1f}")
+    return "\n".join(lines)
 
 
 def format_fidelity_report(report: FidelityReport, spec: GridSpec) -> str:

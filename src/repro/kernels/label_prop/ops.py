@@ -1,5 +1,8 @@
 """Dispatch wrapper: gathers neighbour labels (XLA), pads N to the node
-block, runs the Pallas round kernel (interpret off-TPU)."""
+block, runs the Pallas round kernel (interpret off-TPU).  The node block
+resolves through the autotuner table (kernels/tuning.py): explicit kwarg >
+tuned entry for the row-count bucket > hard-coded default, resolved in the
+plain-python wrappers before any jitted call."""
 from __future__ import annotations
 
 import functools
@@ -7,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.label_prop.label_prop import label_prop_round_pallas
 
 
@@ -15,12 +19,14 @@ def _on_tpu() -> bool:
 
 
 def pallas_round_padded(nbr_labels: jnp.ndarray, wgt: jnp.ndarray,
-                        own: jnp.ndarray, *, block_n: int = 256):
+                        own: jnp.ndarray, *, block_n: int = None):
     """Run the Pallas round kernel on pre-gathered neighbour labels
     (N, K), padding N up to the node block; interpret mode off-TPU.
     Shared by the single-device pallas engine and the sharded pipeline's
     local node blocks."""
     rows = nbr_labels.shape[0]
+    block_n = tuning.resolve("label_prop_round", n=rows, dtype="float32",
+                             block_n=block_n)["block_n"]
     bn = min(block_n, max(8, rows))
     pad = (-rows) % bn
     lab_p = jnp.pad(nbr_labels, ((0, pad), (0, 0)), constant_values=-1)
@@ -31,12 +37,20 @@ def pallas_round_padded(nbr_labels: jnp.ndarray, wgt: jnp.ndarray,
     return out[:rows]
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "use_kernel"))
 def label_prop_round(labels: jnp.ndarray, nbr: jnp.ndarray,
-                     wgt: jnp.ndarray, *, block_n: int = 256,
+                     wgt: jnp.ndarray, *, block_n: int = None,
                      use_kernel: bool = True):
     """One LP round over ELL adjacency: labels (N,), nbr (N, K) node ids
     (-1 pad), wgt (N, K). Returns new labels (N,)."""
+    block_n = tuning.resolve("label_prop_round", n=labels.shape[0],
+                             dtype="float32", block_n=block_n)["block_n"]
+    return _label_prop_round(labels, nbr, wgt, block_n=block_n,
+                             use_kernel=use_kernel)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "use_kernel"))
+def _label_prop_round(labels: jnp.ndarray, nbr: jnp.ndarray,
+                      wgt: jnp.ndarray, *, block_n: int, use_kernel: bool):
     lab = jnp.where(nbr >= 0, labels[jnp.maximum(nbr, 0)], -1)
     if not use_kernel:
         from repro.kernels.label_prop.ref import label_prop_round_ref

@@ -4,6 +4,13 @@ Padding note: padded corpus rows get code 0; a real query could tie with
 them, so the kernel masks by true row count (``n_valid``) and padded ids
 come back as −1 / −inf.  ``k`` is clamped to the corpus size and the result
 padded back, so engine-path shapes never crash ``lax.top_k``.
+
+Block sizes resolve through the autotuner table (kernels/tuning.py):
+explicit kwarg > tuned entry for the corpus-size bucket > hard-coded
+default, resolved in the plain-python outer wrapper before the inner jit
+(a lookup inside a jitted body would go stale when the table changes).
+The candidate block clamps to the padded corpus size — no 128-row floor
+wasted on small corpora.
 """
 from __future__ import annotations
 
@@ -12,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import tuning
 from repro.kernels.lsh_hamming.lsh_hamming import hamming_topk_pallas
 from repro.kernels.lsh_hamming.ref import hamming_topk_ref
 from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
@@ -21,18 +29,31 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _ceil8(n: int) -> int:
+    return max(8, ((n + 7) // 8) * 8)
+
+
+def hamming_topk(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *, k: int,
+                 block_q: int = None, block_n: int = None,
+                 use_kernel: bool = True):
+    blocks = tuning.resolve("hamming_topk", n=c_codes.shape[0],
+                            dtype=c_codes.dtype, block_q=block_q,
+                            block_n=block_n)
+    return _hamming_topk(q_codes, c_codes, k=k, use_kernel=use_kernel,
+                         **blocks)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "block_q", "block_n",
                                              "use_kernel"))
-def hamming_topk(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *, k: int,
-                 block_q: int = 128, block_n: int = 1024,
-                 use_kernel: bool = True):
+def _hamming_topk(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *, k: int,
+                  block_q: int, block_n: int, use_kernel: bool):
     n = c_codes.shape[0]
     k_eff = min(k, n)
     if not use_kernel or k_eff > 32:
         return _pad_topk(*hamming_topk_ref(q_codes, c_codes, k=k_eff), k)
     qn, w = q_codes.shape
     bq = min(block_q, max(8, qn))
-    bn = min(block_n, max(128, n))
+    bn = min(block_n, _ceil8(n))
     pad_q = (-qn) % bq
     pad_n = (-n) % bn
     qp = jnp.pad(q_codes, ((0, pad_q), (0, 0)))

@@ -24,6 +24,15 @@ def topk_scores_ref(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int):
     return top_s, top_i.astype(jnp.int32)
 
 
+def topk_scores_int8_ref(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *,
+                         k: int):
+    """int8-code oracle: exact int32 dot (|dot| ≤ 127²·D < 2³¹ for any
+    realistic D), ranked as f32 like the kernel's partials."""
+    scores = jnp.dot(q_codes.astype(jnp.int32), c_codes.astype(jnp.int32).T)
+    top_s, top_i = lax.top_k(scores.astype(jnp.float32), k)
+    return top_s, top_i.astype(jnp.int32)
+
+
 def gathered_topk_ref(queries: jnp.ndarray, cand_vecs: jnp.ndarray,
                       cand_ids: jnp.ndarray, *, k: int):
     """Per-query candidate sets: queries (Q, D), cand_vecs (Q, C, D),

@@ -46,6 +46,41 @@ def _topk_kernel(q_ref, c_ref, s_out_ref, i_out_ref, *, k: int, block_n: int):
     i_out_ref[...] = out_i
 
 
+def _topk_int8_kernel(q_ref, c_ref, s_out_ref, i_out_ref, *, k: int,
+                      block_n: int, n_valid: int):
+    """int8 variant: codes dot in int8 with an int32 accumulator (the MXU's
+    quantized path on TPU), ranking on the raw integer dot — the global
+    query/corpus scales are positive constants, so the int32 order equals
+    the dequantized order.  Padding is masked by true row count
+    (``n_valid``), the lsh kernel's scheme — an int8 sentinel coordinate
+    can't work, the widest code is ±127."""
+    j = pl.program_id(1)
+    q = q_ref[...]                             # (bq, d) int8
+    c = c_ref[...]                             # (bn, d) int8
+    scores = lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    ids = j * block_n + lax.broadcasted_iota(jnp.int32, scores.shape, 1)
+    scores = jnp.where(ids < n_valid, scores, -jnp.inf)
+    bq = scores.shape[0]
+
+    def body(i, carry):
+        scores, out_s, out_i = carry
+        m = jnp.max(scores, axis=1)
+        arg = jnp.argmax(scores, axis=1).astype(jnp.int32)
+        out_s = lax.dynamic_update_slice(out_s, m[:, None], (0, i))
+        out_i = lax.dynamic_update_slice(
+            out_i, (j * block_n + arg)[:, None], (0, i))
+        hit = lax.broadcasted_iota(jnp.int32, scores.shape, 1) == arg[:, None]
+        return jnp.where(hit, -jnp.inf, scores), out_s, out_i
+
+    out_s = jnp.full((bq, k), -jnp.inf, jnp.float32)
+    out_i = jnp.full((bq, k), -1, jnp.int32)
+    _, out_s, out_i = lax.fori_loop(0, k, body, (scores, out_s, out_i))
+    s_out_ref[...] = out_s
+    i_out_ref[...] = out_i
+
+
 def _gathered_kernel(q_ref, c_ref, i_ref, s_out_ref, i_out_ref, *, k: int):
     """Per-query candidate scoring: each query row scores ITS OWN candidate
     block (the ivfflat probe gather), so the dot is a batched row-wise
@@ -149,6 +184,46 @@ def topk_scores_pallas(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
     )(queries, corpus)
 
     # cross-block merge of the (nc * k) partials per query
+    top_s, pos = lax.top_k(partial_s, k)
+    top_i = jnp.take_along_axis(partial_i, pos, axis=1)
+    return top_s, top_i
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "block_n", "interpret",
+                                    "n_valid"))
+def topk_scores_int8_pallas(q_codes: jnp.ndarray, c_codes: jnp.ndarray, *,
+                            k: int, block_q: int = 128, block_n: int = 1024,
+                            interpret: bool = False, n_valid: int = None):
+    """q_codes (Q, D) i8, c_codes (N, D) i8 ->
+    (int-dot scores as f32 (Q, k), ids (Q, k)).
+
+    Q must be a multiple of block_q and N of block_n (ops.py pads; rows at
+    or past ``n_valid`` are masked to −inf/−1 inside the kernel).
+    """
+    qn, d = q_codes.shape
+    n = c_codes.shape[0]
+    nq, nc = qn // block_q, n // block_n
+
+    partial_s, partial_i = pl.pallas_call(
+        functools.partial(_topk_int8_kernel, k=k, block_n=block_n,
+                          n_valid=n if n_valid is None else n_valid),
+        grid=(nq, nc),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+            pl.BlockSpec((block_q, k), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qn, nc * k), jnp.float32),
+            jax.ShapeDtypeStruct((qn, nc * k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_codes, c_codes)
+
     top_s, pos = lax.top_k(partial_s, k)
     top_i = jnp.take_along_axis(partial_i, pos, axis=1)
     return top_s, top_i

@@ -6,6 +6,7 @@ through the trie-shared plan executor and prints the sample-fidelity report.
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --json results/eval.json
   PYTHONPATH=src python -m repro.launch.evaluate --engines exact,lsh --ks 3,10,20
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --backend pallas --sharded --mesh host
+  PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --backend int8 --no-tuned-kernels
 """
 from __future__ import annotations
 
@@ -17,9 +18,11 @@ import os
 from repro.data.synthetic import generate_corpus
 from repro.eval import (GridSpec, SearchConfig, available_backends,
                         available_retrieval_engines, available_samplers,
-                        build_fidelity_report, format_fidelity_report,
+                        backend_recall_curve, build_fidelity_report,
+                        format_backend_curve, format_fidelity_report,
                         get_backend, get_retrieval_engine, get_sampler,
                         run_grid)
+from repro.kernels import tuning
 from repro.launch.mesh import parse_mesh
 
 GRIDS = {
@@ -57,6 +60,13 @@ def main(argv=None):
     p.add_argument("--mesh", default="host",
                    help="mesh for --sharded: host (1-device, production "
                         "axis names) or auto (all local devices)")
+    p.add_argument("--no-tuned-kernels", action="store_true",
+                   help="CLI escape hatch: ignore the autotuned block table "
+                        "(kernels/tuning.py) and use the hard-coded kernel "
+                        "defaults (env equivalent: REPRO_TUNED_KERNELS=off)")
+    p.add_argument("--no-backend-curve", action="store_true",
+                   help="skip the backend recall-vs-speed curve appended to "
+                        "the fidelity output")
     p.add_argument("--sample-frac", type=float, default=None)
     p.add_argument("--max-queries", type=int, default=None)
     p.add_argument("--queries", type=int, default=512,
@@ -95,6 +105,8 @@ def main(argv=None):
     for name in spec.engines:
         get_retrieval_engine(name)
     get_backend(args.backend)
+    if args.no_tuned_kernels:
+        tuning.set_table(None)      # force hard-coded kernel defaults
     search = SearchConfig(backend=args.backend, sharded=args.sharded,
                           mesh=parse_mesh(args.mesh) if args.sharded
                           else None)
@@ -128,11 +140,26 @@ def main(argv=None):
         print("\n(no 'full' sampler in the grid -> skipping the fidelity "
               "report; add full to --samplers for deltas and Kendall-tau)")
 
+    curve = None
+    if not args.no_backend_curve:
+        # backend-level recall-vs-speed on the grid's own embedding: the
+        # int8 backend's recall@10 vs jnp exact, swept over rerank_factor
+        import jax.numpy as jnp
+        from repro.eval import tfidf_embedder
+        ev, qv = tfidf_embedder(corpus)
+        nq = min(128, qv.shape[0])
+        curve = backend_recall_curve(jnp.asarray(ev), jnp.asarray(qv[:nq]),
+                                     k=10)
+        print()
+        print(format_backend_curve(curve, k=10))
+
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         out = {"grid": result.to_json()}
         if report is not None:
             out["fidelity"] = report.to_json()
+        if curve is not None:
+            out["backend_curve"] = curve
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
         print(f"\nwrote {args.json}")

@@ -19,7 +19,28 @@ string on any engine rather than a fork in each index.  Registered:
                  the kernel oracles for Hamming and gathered scoring.
   * ``pallas`` — the fused Pallas kernels (kernels/topk_scoring,
                  kernels/lsh_hamming); interpret mode off-TPU, so the
-                 backend is selectable everywhere.
+                 backend is selectable everywhere.  Block sizes default to
+                 ``None`` = resolved per call through the autotuner table
+                 (kernels/tuning.py, DESIGN.md §11).
+  * ``int8``   — quantized dense scan + float rerank tail: the corpus is
+                 quantized ONCE at index build (``prepare_corpus`` →
+                 :class:`QuantizedCorpus`, via
+                 ``distributed/compression.quantize_int8``), queries are
+                 quantized per call, the int8 Pallas kernel scans for the
+                 top ``rerank_factor*k`` candidates on the raw integer dot
+                 (ranking is invariant to the two global scales), and the
+                 winners are exact-reranked in f32 — so results are
+                 exact-at-k whenever the true top-k survives into the int8
+                 top-``rerank_factor*k`` pool (DESIGN.md §11 for the
+                 argument).  Hamming scoring delegates to the pallas
+                 kernel (codes are already 1-bit); gathered scoring
+                 delegates to the float pallas kernel (the ivfflat probe
+                 gather has already shrunk the candidate set, so int8
+                 would re-quantize per call for no bandwidth win).
+
+``prepare_corpus`` is the build-time hook: engines pass their corpus-side
+matrix through it so a backend can transform the layout once per index
+(identity for jnp/pallas, quantization for int8).
 
 Tie policy (both backends, verified by tests/test_search_core.py): results
 are score-descending; equal scores break toward the FIRST candidate in the
@@ -38,12 +59,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Protocol, runtime_checkable
+from typing import Dict, NamedTuple, Optional, Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.distributed.compression import quantize_int8
 from repro.kernels.lsh_hamming import ops as lsh_ops
 from repro.kernels.lsh_hamming.ref import hamming_topk_ref
 from repro.kernels.topk_scoring import ops as topk_ops
@@ -57,9 +79,13 @@ class ScoringBackend(Protocol):
 
     name: str
 
-    def topk(self, queries: jnp.ndarray, corpus: jnp.ndarray, *,
-             k: int):
-        """(Q, D) x (N, D) -> (scores f32[Q, k], ids i32[Q, k])."""
+    def prepare_corpus(self, vecs: jnp.ndarray):
+        """Build-time hook: corpus f32[N, D] -> whatever layout ``topk``
+        consumes (identity for float backends)."""
+        ...
+
+    def topk(self, queries: jnp.ndarray, corpus, *, k: int):
+        """(Q, D) x prepared corpus -> (scores f32[Q, k], ids i32[Q, k])."""
         ...
 
     def hamming_topk(self, q_codes: jnp.ndarray, c_codes: jnp.ndarray, *,
@@ -94,6 +120,38 @@ def get_backend(name: str) -> ScoringBackend:
 
 def available_backends() -> tuple:
     return tuple(sorted(_REGISTRY))
+
+
+class QuantizedCorpus(NamedTuple):
+    """Int8-quantized corpus built once per index (``prepare_corpus``):
+    codes for the kernel scan, the global scale, and the original float
+    vectors kept for the exact rerank tail."""
+
+    codes: jnp.ndarray   # (N, D) int8
+    scale: jnp.ndarray   # () f32 global max-abs scale
+    vecs: jnp.ndarray    # (N, D) f32 originals (rerank + float fallback)
+
+
+def _float_corpus(corpus) -> jnp.ndarray:
+    """Float view of a prepared corpus — lets the float backends search an
+    index an int8-backed engine built (cross-backend ``dataclasses.replace``
+    swaps stay valid)."""
+    return corpus.vecs if isinstance(corpus, QuantizedCorpus) else corpus
+
+
+def rerank_candidates(vecs: jnp.ndarray, queries: jnp.ndarray,
+                      cand: jnp.ndarray, *, k: int):
+    """Exact inner-product rerank of per-query candidate ids (−1 = miss):
+    (Q, R) -> top-k (scores, ids).  Shared by the single-device and sharded
+    lsh search paths and the int8 backend's float tail, so all rank
+    identically."""
+    cvecs = vecs[jnp.maximum(cand, 0)]                    # (Q, R, d)
+    s = jnp.einsum("qd,qrd->qr", queries, cvecs)
+    s = jnp.where(cand >= 0, s, -jnp.inf)
+    top_s, pos = lax.top_k(s, min(k, cand.shape[1]))
+    top_i = jnp.take_along_axis(cand, pos, axis=1)
+    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
+    return _pad_topk(top_s, top_i, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "block"))
@@ -139,8 +197,12 @@ class JnpBackend:
     block: int = 4096
     name: str = "jnp"
 
+    def prepare_corpus(self, vecs):
+        return vecs
+
     def topk(self, queries, corpus, *, k: int):
-        return _blocked_topk(queries, corpus, k=k, block=self.block)
+        return _blocked_topk(queries, _float_corpus(corpus), k=k,
+                             block=self.block)
 
     def hamming_topk(self, q_codes, c_codes, *, k: int):
         k_eff = min(k, c_codes.shape[0])
@@ -156,15 +218,22 @@ class JnpBackend:
 @dataclasses.dataclass(frozen=True)
 class PallasBackend:
     """Fused Pallas kernels (interpret mode off-TPU); the dispatch wrappers
-    in kernels/*/ops.py own padding, k-clamping and the k > 32 fallback."""
+    in kernels/*/ops.py own padding, k-clamping and the k > 32 fallback.
 
-    block_q: int = 128
-    block_n: int = 1024
-    block_c: int = 256
+    ``None`` block fields defer to the autotuner table (kernels/tuning.py):
+    explicit kwarg > tuned entry for the corpus-size bucket > hard-coded
+    default.  ``dataclasses.replace`` with concrete ints pins blocks."""
+
+    block_q: Optional[int] = None
+    block_n: Optional[int] = None
+    block_c: Optional[int] = None
     name: str = "pallas"
 
+    def prepare_corpus(self, vecs):
+        return vecs
+
     def topk(self, queries, corpus, *, k: int):
-        return topk_ops.topk_scores(queries, corpus, k=k,
+        return topk_ops.topk_scores(queries, _float_corpus(corpus), k=k,
                                     block_q=self.block_q,
                                     block_n=self.block_n)
 
@@ -176,3 +245,50 @@ class PallasBackend:
     def gathered_topk(self, queries, cand_vecs, cand_ids, *, k: int):
         return topk_ops.gathered_topk(queries, cand_vecs, cand_ids, k=k,
                                       block_c=self.block_c)
+
+
+@register_backend
+@dataclasses.dataclass(frozen=True)
+class Int8Backend:
+    """Quantized dense scan + float rerank tail.
+
+    The int8 kernel scans the quantized corpus for the top
+    ``rerank_factor*k`` candidates on the raw integer dot (scale-invariant
+    ranking: both scales are global positive constants), then
+    :func:`rerank_candidates` rescores those candidates with the original
+    f32 vectors — exact-at-k whenever the true top-k survives into the
+    int8 candidate pool (rerank_factor trades recall against scan width;
+    ``eval/fidelity.backend_recall_curve`` measures the trade).
+
+    Hamming/gathered scoring delegate to the pallas kernels — codes are
+    already 1-bit, and the ivfflat probe gather has already shrunk the
+    candidate set, so a per-call re-quantization buys no bandwidth."""
+
+    rerank_factor: int = 4
+    block_q: Optional[int] = None
+    block_n: Optional[int] = None
+    name: str = "int8"
+
+    def prepare_corpus(self, vecs):
+        vecs = jnp.asarray(vecs)
+        codes, scale = quantize_int8(vecs)
+        return QuantizedCorpus(codes, scale, vecs)
+
+    def topk(self, queries, corpus, *, k: int):
+        qc = (corpus if isinstance(corpus, QuantizedCorpus)
+              else self.prepare_corpus(corpus))
+        n = qc.codes.shape[0]
+        pool = min(max(self.rerank_factor * k, k), n)
+        q_codes, _ = quantize_int8(jnp.asarray(queries, jnp.float32))
+        _, cand = topk_ops.topk_scores_int8(q_codes, qc.codes, k=pool,
+                                            block_q=self.block_q,
+                                            block_n=self.block_n)
+        return rerank_candidates(qc.vecs, queries, cand, k=k)
+
+    def hamming_topk(self, q_codes, c_codes, *, k: int):
+        return lsh_ops.hamming_topk(q_codes, c_codes, k=k,
+                                    block_q=self.block_q,
+                                    block_n=self.block_n)
+
+    def gathered_topk(self, queries, cand_vecs, cand_ids, *, k: int):
+        return topk_ops.gathered_topk(queries, cand_vecs, cand_ids, k=k)

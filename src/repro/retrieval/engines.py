@@ -44,6 +44,7 @@ from typing import Any, Dict, NamedTuple, Protocol, runtime_checkable
 
 import jax.numpy as jnp
 
+from repro.retrieval.backends import get_backend
 from repro.retrieval.exact import exact_topk
 from repro.retrieval.ivfflat import build_ivfflat, search_ivfflat
 from repro.retrieval.lsh import build_lsh, search_lsh
@@ -99,7 +100,8 @@ class ExactEngine:
 
     def build(self, key, vecs):
         del key  # deterministic
-        return vecs
+        # build-time backend hook: int8 quantizes the corpus once here
+        return get_backend(self.backend).prepare_corpus(vecs)
 
     def search(self, index, queries, *, k: int):
         return exact_topk(queries, index, k=k, block=self.block,
@@ -151,7 +153,8 @@ class LSHEngine:
 
 
 class TfIdfIndex(NamedTuple):
-    vecs: jnp.ndarray      # (N, D) IDF-weighted corpus
+    vecs: Any              # (N, D) IDF-weighted corpus, backend-prepared
+                           # (QuantizedCorpus under the int8 backend)
     weights: jnp.ndarray   # (D,) per-dimension log1p(N/df)
 
 
@@ -171,7 +174,10 @@ class TfIdfEngine:
         n = vecs.shape[0]
         df = jnp.sum(vecs > 0, axis=0).astype(jnp.float32) + 1.0
         w = jnp.log1p(n / df)
-        return TfIdfIndex(vecs * w[None, :], w)
+        # IDF folds in before the backend hook so int8 quantizes the
+        # weighted rows the scan will actually score
+        return TfIdfIndex(get_backend(self.backend).prepare_corpus(
+            vecs * w[None, :]), w)
 
     def search(self, index, queries, *, k: int):
         return exact_topk(queries, index.vecs, k=k, block=self.block,

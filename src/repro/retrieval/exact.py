@@ -16,7 +16,9 @@ def exact_topk(queries: jnp.ndarray, corpus: jnp.ndarray, *, k: int,
     """queries (Q, D), corpus (N, D) -> (scores (Q, k), ids (Q, k));
     score −inf / id −1 padding when k exceeds the corpus size.  ``block``
     tunes the jnp backend's streaming block (the pallas backend's block
-    sizes live on its registry instance)."""
+    sizes live on its registry instance / the autotuner table).  ``corpus``
+    may be a backend-prepared layout (QuantizedCorpus for int8, plain
+    array otherwise) — every backend accepts both."""
     bk = get_backend(backend)
     if backend == "jnp" and block != bk.block:
         bk = dataclasses.replace(bk, block=block)

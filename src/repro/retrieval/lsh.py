@@ -14,10 +14,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.kernels.topk_scoring.ref import pad_topk
-from repro.retrieval.backends import get_backend
+from repro.kernels.topk_scoring.ref import pad_topk  # noqa: F401 (re-export)
+from repro.retrieval.backends import get_backend, rerank_candidates
 
 
 class LSHIndex(NamedTuple):
@@ -52,20 +51,6 @@ def build_lsh(key, corpus: jnp.ndarray, *, n_bits: int = 128) -> LSHIndex:
     d = corpus.shape[1]
     proj = jax.random.normal(key, (d, n_bits), corpus.dtype)
     return LSHIndex(proj, encode(proj, corpus), corpus)
-
-
-def rerank_candidates(vecs: jnp.ndarray, queries: jnp.ndarray,
-                      cand: jnp.ndarray, *, k: int):
-    """Exact inner-product rerank of per-query candidate ids (−1 = miss):
-    (Q, R) -> top-k (scores, ids).  Shared by the single-device and sharded
-    lsh search paths so both rank identically."""
-    cvecs = vecs[jnp.maximum(cand, 0)]                    # (Q, R, d)
-    s = jnp.einsum("qd,qrd->qr", queries, cvecs)
-    s = jnp.where(cand >= 0, s, -jnp.inf)
-    top_s, pos = lax.top_k(s, min(k, cand.shape[1]))
-    top_i = jnp.take_along_axis(cand, pos, axis=1)
-    top_i = jnp.where(jnp.isfinite(top_s), top_i, -1)
-    return pad_topk(top_s, top_i, k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rerank", "backend"))

@@ -13,7 +13,9 @@ Configuration is one declarative :class:`SearchConfig`:
 
   * ``engine``  — a registered retrieval engine (retrieval/engines.py);
   * ``backend`` — a registered scoring backend (retrieval/backends.py,
-    Layer 1): ``jnp`` reference or ``pallas`` kernels;
+    Layer 1): ``jnp`` reference, ``pallas`` kernels, or ``int8``
+    quantized scan + float rerank (applied before ``engine.build`` so
+    build-time hooks like int8 corpus quantization see it);
   * ``sharded``/``mesh`` — route searches through the mesh-partitioned
     Layer 2 (retrieval/sharded.py);
   * ``query_chunk`` — chunked multi-query batching, so the probe gather
@@ -73,6 +75,11 @@ class SearchSession:
         if cfg.sharded and cfg.mesh is None:
             raise ValueError("sharded search needs a mesh; pass "
                              "SearchConfig(mesh=...) (launch.mesh helpers)")
+        if cfg.sharded and cfg.backend == "int8":
+            raise ValueError(
+                "sharded search does not support the 'int8' backend (the "
+                "row-shard padding sentinel would destroy the quantization "
+                "scale); use backend='jnp' or 'pallas'")
         if cfg.engine_opts:
             engine = dataclasses.replace(engine, **dict(cfg.engine_opts))
         self.config = cfg

@@ -48,8 +48,8 @@ from jax.experimental.shard_map import shard_map
 from repro.distributed import collectives as coll
 from repro.distributed.sharding import RETRIEVAL_RULES, partition_axes
 from repro.kernels.topk_scoring.ref import pad_topk as _pad_topk
-from repro.retrieval.backends import get_backend
-from repro.retrieval.lsh import encode, rerank_candidates
+from repro.retrieval.backends import get_backend, rerank_candidates
+from repro.retrieval.lsh import encode
 
 
 def _resolve_axes(mesh: Mesh, axes: Optional[tuple]) -> tuple:
@@ -225,6 +225,13 @@ def sharded_search(engine, index, queries: jnp.ndarray, *, k: int,
     from, −inf/−1 padding for misses.  Bit-consistent with single-device
     search on a 1-device mesh; set-equal under the backend tie policy on
     larger meshes."""
+    if getattr(engine, "backend", None) == "int8":
+        # the row-shard padding sentinel (−1e30 coordinate) would destroy
+        # the int8 corpus scale, and shard-local quantization changes the
+        # candidate ranking; quantized sharded scoring is future work
+        raise ValueError(
+            "sharded search does not support the 'int8' backend; use "
+            "backend='jnp' or 'pallas' for sharded meshes")
     try:
         impl = _SHARDED_IMPLS[engine.name]
     except KeyError:

@@ -1,0 +1,83 @@
+"""Int8 quantization + error-feedback compression tests
+(distributed/compression.py) — the same quantizer the int8 scoring
+backend reuses for corpus codes (retrieval/backends.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.compression import (compress_leaf, dequantize_int8,
+                                           ef_init, quantize_int8,
+                                           topk_sparsify)
+
+
+@pytest.mark.parametrize("shape", [(64,), (17, 9), (4, 8, 3)])
+def test_quantize_roundtrip_error_bound(shape):
+    """|x - deq(q(x))| <= scale/2 elementwise: round-to-nearest onto a
+    127-level symmetric grid."""
+    x = jax.random.normal(jax.random.PRNGKey(sum(shape)), shape) * 3.0
+    q, scale = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = np.abs(np.asarray(x) - np.asarray(dequantize_int8(q, scale)))
+    assert (err <= float(scale) / 2 + 1e-7).all()
+
+
+def test_quantize_all_zero_leaf():
+    """All-zero leaves must not divide by zero and round-trip exactly."""
+    x = jnp.zeros((8, 8))
+    q, scale = quantize_int8(x)
+    assert np.isfinite(float(scale)) and float(scale) > 0
+    assert (np.asarray(q) == 0).all()
+    assert (np.asarray(dequantize_int8(q, scale)) == 0).all()
+
+
+@pytest.mark.parametrize("peak", [1e-20, 1.0, 1e20, -1e20])
+def test_quantize_extreme_values(peak):
+    """±extreme magnitudes: the max-|x| element always maps to ±127 and
+    dequantizes back to the exact peak."""
+    x = jnp.zeros((16,)).at[3].set(peak)
+    q, scale = quantize_int8(x)
+    assert int(np.asarray(q)[3]) == (127 if peak > 0 else -127)
+    deq = np.asarray(dequantize_int8(q, scale))
+    np.testing.assert_allclose(deq[3], peak, rtol=1e-5)
+    assert np.isfinite(deq).all()
+
+
+def test_quantize_ranking_invariant():
+    """Global symmetric scaling preserves dot-product ranking up to
+    quantization noise — the property the int8 search backend relies on:
+    the exact top-1 must be inside a small int8-scored candidate pool."""
+    vecs = jax.random.normal(jax.random.PRNGKey(0), (100, 32))
+    qv = jax.random.normal(jax.random.PRNGKey(1), (5, 32))
+    cq, _ = quantize_int8(vecs)
+    qq, _ = quantize_int8(qv)
+    s8 = np.asarray(jnp.dot(qq.astype(jnp.int32), cq.astype(jnp.int32).T))
+    sf = np.asarray(jnp.dot(qv, vecs.T))
+    for row8, rowf in zip(s8, sf):
+        pool = set(np.argsort(row8)[-4:].tolist())
+        assert int(np.argmax(rowf)) in pool
+
+
+def test_error_feedback_converges():
+    """Repeated compress_leaf of a constant gradient: the running mean of
+    dequantized outputs converges to the true gradient (EF unbiasedness),
+    and each residual stays bounded by scale/2."""
+    g = jax.random.normal(jax.random.PRNGKey(7), (33,)) * 0.1
+    err = ef_init({"w": g})["w"]
+    acc = np.zeros_like(np.asarray(g))
+    steps = 64
+    for _ in range(steps):
+        q, scale, err = compress_leaf(g, err)
+        acc += np.asarray(dequantize_int8(q, scale))
+        assert (np.abs(np.asarray(err)) <= float(scale) / 2 + 1e-7).all()
+    np.testing.assert_allclose(acc / steps, np.asarray(g),
+                               atol=5e-4, rtol=0)
+
+
+def test_topk_sparsify_error_feedback():
+    g = jax.random.normal(jax.random.PRNGKey(3), (256,))
+    sent, resid = topk_sparsify(g, jnp.zeros_like(g), frac=0.05)
+    nz = int((np.asarray(sent) != 0).sum())
+    assert 1 <= nz <= int(0.05 * 256) + 1
+    np.testing.assert_allclose(np.asarray(sent) + np.asarray(resid),
+                               np.asarray(g), atol=1e-6)

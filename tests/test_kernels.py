@@ -11,8 +11,11 @@ from repro.kernels.label_prop.ops import label_prop_round
 from repro.kernels.label_prop.ref import label_prop_round_ref
 from repro.kernels.lsh_hamming.ops import hamming_topk
 from repro.kernels.lsh_hamming.ref import hamming_topk_ref
-from repro.kernels.topk_scoring.ops import gathered_topk, topk_scores
-from repro.kernels.topk_scoring.ref import gathered_topk_ref, topk_scores_ref
+from repro.kernels.topk_scoring.ops import (gathered_topk, topk_scores,
+                                            topk_scores_int8)
+from repro.kernels.topk_scoring.ref import (gathered_topk_ref,
+                                            topk_scores_int8_ref,
+                                            topk_scores_ref)
 from repro.core.label_prop import ell_round
 
 
@@ -55,6 +58,40 @@ def test_topk_scoring_odd_shapes(q, n, d, k, use_kernel):
     assert (np.asarray(i)[:, :k_eff] == np.asarray(i_ref)).all()
     assert (np.asarray(i)[:, k_eff:] == -1).all()
     assert np.isneginf(np.asarray(s)[:, k_eff:]).all()
+
+
+@pytest.mark.parametrize("q,n,d,k", [
+    (16, 256, 32, 3), (64, 1000, 64, 8), (7, 513, 16, 5),
+    (3, 50, 16, 7),           # q and n below the block floors
+    (3, 5, 8, 9),             # odd-small shape, k > n (pad-row hazard)
+    (5, 40, 8, 70),           # k > _MAX_KERNEL_K_INT8 -> ref fallback
+])
+def test_topk_scoring_int8(q, n, d, k):
+    """int8 scoring kernel vs the int32-accumulate oracle.  Codes are drawn
+    all-negative-capable so a zero-valued pad row would win without the
+    kernel's n_valid masking (the same hazard as the sharded pad test)."""
+    key = jax.random.PRNGKey(q * n + k)
+    qc = jax.random.randint(key, (q, d), -127, 128, dtype=jnp.int8)
+    cc = jax.random.randint(jax.random.PRNGKey(1), (n, d), -127, 128,
+                            dtype=jnp.int8)
+    s, i = topk_scores_int8(qc, cc, k=k)
+    k_eff = min(k, n)
+    s_ref, i_ref = topk_scores_int8_ref(qc, cc, k=k_eff)
+    assert s.shape == (q, k) and i.shape == (q, k)
+    np.testing.assert_allclose(np.asarray(s)[:, :k_eff], np.asarray(s_ref))
+    assert (np.asarray(i)[:, :k_eff] == np.asarray(i_ref)).all()
+    assert (np.asarray(i)[:, k_eff:] == -1).all()
+    assert np.isneginf(np.asarray(s)[:, k_eff:]).all()
+
+
+def test_topk_scoring_int8_all_negative():
+    """Every true score negative: the padded tail must never be selected."""
+    qc = -jnp.ones((4, 16), jnp.int8) * 3
+    cc = jnp.abs(jax.random.randint(jax.random.PRNGKey(0), (37, 16), 1, 100)
+                 ).astype(jnp.int8)
+    s, i = topk_scores_int8(qc, cc, k=5)
+    assert (np.asarray(s) < 0).all()
+    assert (np.asarray(i) >= 0).all() and (np.asarray(i) < 37).all()
 
 
 @pytest.mark.parametrize("q,n,w,k", [(5, 40, 2, 60), (3, 5, 2, 9),

@@ -37,7 +37,7 @@ def _row_sets(ids):
 
 
 def test_backend_registry_contents():
-    assert {"jnp", "pallas"} <= set(available_backends())
+    assert {"jnp", "pallas", "int8"} <= set(available_backends())
     for name in available_backends():
         assert isinstance(get_backend(name), ScoringBackend)
     assert set(ENGINES) == set(available_retrieval_engines())
@@ -60,6 +60,56 @@ def test_pallas_backend_matches_jnp(data, engine):
     ids_p = dataclasses.replace(eng, backend="pallas").search(
         index, queries, k=5)
     assert _row_sets(ids_j) == _row_sets(ids_p)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_int8_backend_matches_jnp(data, engine):
+    """int8 quantized scoring + float rerank is top-k set-equal to the jnp
+    backend for every engine: with rerank_factor*k >= k the true top-k sits
+    inside the int8 candidate pool and the float rerank restores the exact
+    ordering (the DESIGN.md §11 exactness argument)."""
+    vecs, queries = data
+    eng = get_retrieval_engine(engine)
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    ids_j = eng.search(index, queries, k=5)
+    eng8 = dataclasses.replace(eng, backend="int8")
+    ids_8 = eng8.search(eng8.build(jax.random.PRNGKey(0), vecs),
+                        queries, k=5)
+    assert _row_sets(ids_j) == _row_sets(ids_8)
+
+
+def test_int8_backend_quantizes_once_at_build(data):
+    """ExactEngine.build under the int8 backend returns a QuantizedCorpus
+    (corpus quantized once at session build, not per search call)."""
+    from repro.retrieval.backends import QuantizedCorpus
+    vecs, queries = data
+    eng = dataclasses.replace(get_retrieval_engine("exact"), backend="int8")
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    assert isinstance(index, QuantizedCorpus)
+    assert index.codes.dtype == jnp.int8
+    assert index.codes.shape == vecs.shape
+
+
+def test_session_int8_backend(data):
+    """Front-door int8: SearchSession(backend='int8') == jnp session as id
+    sets, and the sharded+int8 combination is rejected at build."""
+    vecs, queries = data
+    ref = SearchSession(vecs, SearchConfig(backend="jnp")).search(
+        queries, k=5)
+    ids = SearchSession(vecs, SearchConfig(backend="int8")).search(
+        queries, k=5)
+    assert _row_sets(ids) == _row_sets(ref)
+    with pytest.raises(ValueError, match="int8"):
+        SearchSession(vecs, SearchConfig(backend="int8", sharded=True,
+                                         mesh=make_host_mesh()))
+
+
+def test_sharded_int8_raises(data):
+    vecs, queries = data
+    eng = dataclasses.replace(get_retrieval_engine("exact"), backend="int8")
+    index = eng.build(jax.random.PRNGKey(0), vecs)
+    with pytest.raises(ValueError, match="int8"):
+        sharded_search(eng, index, queries, k=5, mesh=make_host_mesh())
 
 
 @pytest.mark.parametrize("backend", ("jnp", "pallas"))
