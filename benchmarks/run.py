@@ -6,13 +6,17 @@ CSV rows (derived = the table's headline number).
   PYTHONPATH=src python -m benchmarks.run --only fig4,table1
   PYTHONPATH=src python -m benchmarks.run --only kernels --json results/bench
   PYTHONPATH=src python -m benchmarks.run --autotune --only retrieval --json results/bench
+
+Timing and provenance come from the obs layer (repro.obs.timing,
+DESIGN.md §12) so the benches, the autotuner, and traced production runs
+all measure the same way.  REPRO_TRACE=<path> additionally streams span
+records from the instrumented cores while the benches run.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import platform
 import sys
 import time
 
@@ -21,6 +25,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs.timing import provenance
+from repro.obs.timing import timeit as _timeit
 
 ROWS = []
 
@@ -31,27 +38,9 @@ def row(name, us, derived):
 
 
 def bench_meta() -> dict:
-    """Host/device/backend provenance stamped into every BENCH_*.json —
+    """Host/device/backend/git provenance stamped into every BENCH_*.json —
     perf trajectories across machines are uninterpretable without it."""
-    dev = jax.devices()[0]
-    return {
-        "platform": platform.platform(),
-        "python": platform.python_version(),
-        "jax": jax.__version__,
-        "backend": jax.default_backend(),
-        "device_kind": dev.device_kind,
-        "device_count": jax.device_count(),
-        "smoke": SMOKE,
-    }
-
-
-def _timeit(fn, n=3):
-    jax.block_until_ready(fn())  # compile/warmup, fully retired before t0
-    t0 = time.time()
-    for _ in range(n):
-        out = fn()
-        jax.block_until_ready(out)
-    return (time.time() - t0) / n * 1e6
+    return {**provenance(), "smoke": SMOKE}
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,7 @@ across a mesh.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -28,6 +29,19 @@ import jax.numpy as jnp
 from repro.core import graph_builder as gb
 from repro.core import reconstructor as rc
 from repro.core import sampler as sm
+
+log = logging.getLogger("repro.core.pipeline")
+_DEPRECATION_NOTED: set = set()
+
+
+def note_deprecated(name: str, replacement: str) -> None:
+    """Log a one-per-process deprecation note for a legacy entry point
+    through the ``repro.*`` logger hierarchy (shared with
+    ``sharded_pipeline``)."""
+    if name not in _DEPRECATION_NOTED:
+        _DEPRECATION_NOTED.add(name)
+        log.warning("%s is deprecated (one release); use %s",
+                    name, replacement)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +78,8 @@ def run_windtunnel(qrels: gb.QRelTable, *, num_queries: int,
        pipeline (tests/test_sampling_core.py enforces parity).
     """
     from repro.core.sampling_core import SamplerSession, SamplerSpec
+    note_deprecated("run_windtunnel",
+                    "sampling_core.SamplerSession (build once, draw many)")
     session = SamplerSession(
         qrels, num_queries=num_queries, num_entities=num_entities,
         spec=SamplerSpec.from_config(config, strategy="windtunnel"))
@@ -81,6 +97,8 @@ def run_uniform_baseline(qrels: gb.QRelTable, *, num_queries: int,
        Bernoulli draw bit-exactly), kept one release for existing callers.
     """
     from repro.core.sampling_core import SamplerSession, SamplerSpec
+    note_deprecated("run_uniform_baseline",
+                    "SamplerSession with the 'uniform' strategy")
     session = SamplerSession(
         qrels, num_queries=num_queries, num_entities=num_entities,
         spec=SamplerSpec(strategy="uniform", seed=seed,

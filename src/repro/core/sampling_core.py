@@ -49,6 +49,7 @@ from repro.core import sampler as sm
 from repro.core.pipeline import WindTunnelConfig, WindTunnelResult
 from repro.core.samplers import DrawState, get_sampler
 from repro.core.sharded_pipeline import sharded_graph_and_labels
+from repro.obs import REGISTRY, trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -205,13 +206,23 @@ class SamplerSession:
 
     def _stage_sharded(self) -> None:
         """One shard_map region computes graph AND labels (they share the
-        partitioned dataflow); both stage slots fill from it."""
-        edges, labels, changes = sharded_graph_and_labels(
-            self.qrels, num_queries=self.num_queries,
-            num_entities=self.num_entities, config=self.spec.to_config(),
-            mesh=self.spec.mesh, axes=self.spec.axes)
-        self._graph = (edges, gb.node_degrees(edges, self.num_entities))
-        self._labels = (labels, changes)
+        partitioned dataflow); both stage slots fill from it.  The fused
+        region is traced as ``sampling.graph`` (where the wall time lives)
+        plus a zero-cost ``sampling.labels`` marker with ``fused=True``,
+        so per-stage aggregates list both stages on either path."""
+        with trace.jax_span("sampling.graph", sharded=True,
+                            engine=self.spec.engine, n=self.num_entities,
+                            q=self.num_queries, fused_labels=True) as sp:
+            edges, labels, changes = sharded_graph_and_labels(
+                self.qrels, num_queries=self.num_queries,
+                num_entities=self.num_entities, config=self.spec.to_config(),
+                mesh=self.spec.mesh, axes=self.spec.axes)
+            self._graph = (edges, gb.node_degrees(edges, self.num_entities))
+            self._labels = (labels, changes)
+            sp.declare(self._graph, self._labels)
+        with trace.span("sampling.labels", sharded=True, fused=True,
+                        engine=self.spec.engine):
+            pass
         self._counts["graph"][0] += 1
         self._counts["labels"][0] += 1
 
@@ -222,11 +233,17 @@ class SamplerSession:
             if self.spec.sharded:
                 self._stage_sharded()
             else:
-                self._graph = _graph_stage(
-                    self.qrels, num_queries=self.num_queries,
-                    num_entities=self.num_entities,
-                    tau_quantile=self.spec.tau_quantile,
-                    fanout=self.spec.fanout)
+                with trace.jax_span("sampling.graph",
+                                    n=self.num_entities,
+                                    q=self.num_queries,
+                                    tau=self.spec.tau_quantile,
+                                    fanout=self.spec.fanout) as sp:
+                    self._graph = _graph_stage(
+                        self.qrels, num_queries=self.num_queries,
+                        num_entities=self.num_entities,
+                        tau_quantile=self.spec.tau_quantile,
+                        fanout=self.spec.fanout)
+                    sp.declare(self._graph)
                 self._counts["graph"][0] += 1
         return self._graph
 
@@ -238,11 +255,17 @@ class SamplerSession:
                 self._stage_sharded()
             else:
                 edges, _ = self.graph()
-                self._labels = _labels_stage(
-                    edges, engine=self.spec.engine,
-                    num_entities=self.num_entities,
-                    max_degree=self.spec.max_degree,
-                    rounds=self.spec.lp_rounds)
+                with trace.jax_span("sampling.labels",
+                                    engine=self.spec.engine,
+                                    n=self.num_entities,
+                                    rounds=self.spec.lp_rounds,
+                                    max_degree=self.spec.max_degree) as sp:
+                    self._labels = _labels_stage(
+                        edges, engine=self.spec.engine,
+                        num_entities=self.num_entities,
+                        max_degree=self.spec.max_degree,
+                        rounds=self.spec.lp_rounds)
+                    sp.declare(self._labels)
                 self._counts["labels"][0] += 1
         return self._labels
 
@@ -271,13 +294,21 @@ class SamplerSession:
         seed = self.spec.seed if seed is None else int(seed)
         key = (strat.name, opts, target, seed)
         self._counts["draw"][1] += 1
-        if key not in self._draws:
+        hit = key in self._draws
+        REGISTRY.counter(
+            "sampling.draw.hit" if hit else "sampling.draw.miss").inc()
+        if not hit:
             labels = self.labels()[0] if strat.needs_labels else None
             degrees = self.graph()[1] if strat.needs_graph else None
-            self._draws[key] = _draw_stage(
-                self.qrels, labels, degrees, seed, strategy=strat.name,
-                opts=opts, target=target, num_queries=self.num_queries,
-                num_entities=self.num_entities)
+            with trace.jax_span("sampling.draw",
+                                compile_key=f"sampling.draw/{strat.name}",
+                                strategy=strat.name, target=target,
+                                seed=seed, cache="miss") as sp:
+                self._draws[key] = _draw_stage(
+                    self.qrels, labels, degrees, seed, strategy=strat.name,
+                    opts=opts, target=target, num_queries=self.num_queries,
+                    num_entities=self.num_entities)
+                sp.declare(self._draws[key])
             self._counts["draw"][0] += 1
         return self._draws[key]
 

@@ -193,7 +193,10 @@ def run_windtunnel_sharded(qrels: gb.QRelTable, *, num_queries: int,
     label id -> mesh-shape independent given equal labels), so a 1-device
     mesh is bit-identical to ``run_windtunnel``.
     """
+    from repro.core.pipeline import note_deprecated
     from repro.core.sampling_core import SamplerSession, SamplerSpec
+    note_deprecated("run_windtunnel_sharded",
+                    "SamplerSession with SamplerSpec(sharded=True, mesh=...)")
     session = SamplerSession(
         qrels, num_queries=num_queries, num_entities=num_entities,
         spec=SamplerSpec.from_config(config, strategy="windtunnel",

@@ -16,7 +16,12 @@ pipeline prefixes across a grid of runs execute exactly once.
 
 Per-node ``executions``/``requests`` counters make the saving observable —
 ``PlanTrie.summary()`` prints, per stage, how many cell walks were served
-from cache instead of recomputed.
+from cache instead of recomputed.  The counters live in a per-trie
+:class:`~repro.obs.metrics.Registry` (``plan.executions.<stage>`` /
+``plan.requests.<stage>``; ``stage_counts()`` reads them back in the
+legacy shape), and every stage-node execution runs inside an
+``eval.<stage>`` span, so a grid's trace shows exactly which nodes ran
+and for how long (DESIGN.md §12).
 
 The trie is deliberately generic: stages are supplied as callables by the
 runner (``runner.py``), so new stage semantics (a different embedder, a
@@ -27,6 +32,8 @@ from __future__ import annotations
 import dataclasses
 import itertools
 from typing import Any, Callable, Dict, List, Mapping, Tuple
+
+from repro.obs import Registry, trace
 
 #: Stage order of the experiment pipeline; also the trie depth order.
 STAGES = ("corpus", "embed", "sample", "index", "search", "metric")
@@ -87,11 +94,23 @@ class PlanNode:
 
 
 class PlanTrie:
-    """Path-keyed stage cache: each node computes once, later walks hit."""
+    """Path-keyed stage cache: each node computes once, later walks hit.
 
-    def __init__(self):
+    Counters are kept in a per-trie metrics :class:`Registry` (isolated,
+    so parallel tries / repeated grids never cross-count) as
+    ``plan.requests.<stage>`` / ``plan.executions.<stage>``;
+    ``stage_counts()`` re-exports them in the legacy dict shape (parity
+    with the per-node sums is enforced by tests/test_obs.py).
+    """
+
+    def __init__(self, metrics: Registry | None = None):
         self.nodes: Dict[Tuple[tuple, ...], PlanNode] = {}
         self._order: List[Tuple[tuple, ...]] = []
+        self.metrics = metrics if metrics is not None else Registry()
+
+    @staticmethod
+    def _node_label(path: Tuple[tuple, ...]) -> str:
+        return "/".join("-".join(str(p) for p in seg) for seg in path)
 
     def run(self, path: Tuple[tuple, ...], fn: Callable[[], Any]) -> Any:
         node = self.nodes.get(path)
@@ -100,18 +119,25 @@ class PlanTrie:
             self.nodes[path] = node
             self._order.append(path)
         node.requests += 1
+        self.metrics.counter(f"plan.requests.{node.stage}").inc()
         if node.executions == 0:
-            node.value = fn()
+            with trace.span(f"eval.{node.stage}", stage=node.stage,
+                            node=self._node_label(path)):
+                node.value = fn()
             node.executions = 1
+            self.metrics.counter(f"plan.executions.{node.stage}").inc()
         return node.value
 
     def stage_counts(self) -> Dict[str, Tuple[int, int]]:
-        """stage -> (executions, requests) summed over the stage's nodes."""
+        """stage -> (executions, requests), read from the registry
+        counters in first-touch stage order (the legacy shape)."""
+        counters = self.metrics.snapshot()["counters"]
         out: Dict[str, Tuple[int, int]] = {}
         for path in self._order:
-            node = self.nodes[path]
-            ex, rq = out.get(node.stage, (0, 0))
-            out[node.stage] = (ex + node.executions, rq + node.requests)
+            stage = self.nodes[path].stage
+            if stage not in out:
+                out[stage] = (counters.get(f"plan.executions.{stage}", 0),
+                              counters.get(f"plan.requests.{stage}", 0))
         return out
 
     def summary(self) -> str:

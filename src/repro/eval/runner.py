@@ -35,6 +35,7 @@ measures extend the grid without touching this walker.
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -53,6 +54,8 @@ from repro.retrieval.metrics import (mrr, ndcg_at_k, precision_at_k,
 from repro.retrieval.tfidf import tfidf_vectors
 
 __all__ = ["GridResult", "run_grid", "tfidf_embedder", "available_samplers"]
+
+log = logging.getLogger("repro.eval.runner")
 
 
 # --------------------------------------------------------------------------
@@ -160,9 +163,11 @@ def run_grid(corpus: SyntheticCorpus, spec: GridSpec, *,
         sampler_stats[run.sampler] = {"n_entities": int(kept_ids.size),
                                       "n_queries": int(qids.size),
                                       "rho_q": rho}
-        if verbose:
-            print(f"  sample[{run.sampler}]: {kept_ids.size} entities, "
-                  f"{qids.size} queries, rho_q={rho:.3f}")
+        # progress goes through the repro.* logger hierarchy (DESIGN.md
+        # §12): verbose=True promotes it to INFO (the CLIs' default level)
+        log.log(logging.INFO if verbose else logging.DEBUG,
+                "  sample[%s]: %d entities, %d queries, rho_q=%.3f",
+                run.sampler, kept_ids.size, qids.size, rho)
         return {**ctx, "kept_ids": kept_ids, "qids": qids}
 
     def stage_index(ctx: dict, run: RunSpec) -> dict:

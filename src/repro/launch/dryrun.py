@@ -18,6 +18,7 @@ EXPERIMENTS.md §Dry-run and §Roofline.
 """
 import argparse
 import json
+import logging
 import re
 import sys
 import time
@@ -27,7 +28,10 @@ import jax
 
 from repro.configs import get_arch, iter_cells, list_archs
 from repro.launch.cells import build_cell
+from repro.launch.logs import add_logging_args, setup_logging
 from repro.launch.mesh import make_production_mesh
+
+log = logging.getLogger("repro.launch.dryrun")
 
 # TPU v5e hardware constants (per chip) for the roofline terms
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
@@ -121,15 +125,14 @@ def run_cell(arch_id: str, shape_name: str, mesh, n_chips: int,
     total_useful = cell.model_flops_per_step / n_chips
     r["useful_flops_ratio"] = (total_useful / flops) if flops else 0.0
     if verbose:
-        print(f"[{arch_id} x {shape_name}] ok "
-              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s) "
-              f"compute {r['compute_s']*1e3:.2f}ms "
-              f"memory {r['memory_s']*1e3:.2f}ms "
-              f"collective {r['collective_s']*1e3:.2f}ms "
-              f"-> {r['bottleneck']}", flush=True)
-        print(f"    temp {res['memory']['temp_size'] and res['memory']['temp_size']/2**30:.2f} GiB/device; "
-              f"args {res['memory']['argument_size'] and res['memory']['argument_size']/2**30:.2f} GiB/device",
-              flush=True)
+        log.info("[%s x %s] ok (lower %.0fs compile %.0fs) "
+                 "compute %.2fms memory %.2fms collective %.2fms -> %s",
+                 arch_id, shape_name, t_lower, t_compile,
+                 r["compute_s"] * 1e3, r["memory_s"] * 1e3,
+                 r["collective_s"] * 1e3, r["bottleneck"])
+        log.info("    temp %.2f GiB/device; args %.2f GiB/device",
+                 (res["memory"]["temp_size"] or 0) / 2**30,
+                 (res["memory"]["argument_size"] or 0) / 2**30)
     return res
 
 
@@ -140,7 +143,9 @@ def main(argv=None):
     p.add_argument("--all", action="store_true")
     p.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
     p.add_argument("--out", default=None, help="write JSON results here")
+    add_logging_args(p)
     args = p.parse_args(argv)
+    setup_logging(args)
 
     meshes = []
     if args.mesh in ("single", "both"):
@@ -158,8 +163,8 @@ def main(argv=None):
     results = []
     failures = 0
     for mesh_name, mesh, n_chips in meshes:
-        print(f"=== mesh {mesh_name} ({n_chips} chips, "
-              f"{len(jax.devices())} devices visible) ===", flush=True)
+        log.info("=== mesh %s (%d chips, %d devices visible) ===",
+                 mesh_name, n_chips, len(jax.devices()))
         for arch_id, shape_name in cells:
             try:
                 res = run_cell(arch_id, shape_name, mesh, n_chips)
@@ -173,7 +178,8 @@ def main(argv=None):
             if args.out:
                 with open(args.out + ".json", "w") as f:
                     json.dump(results, f, indent=2)
-    print(f"\n{len(results) - failures}/{len(results)} cells compiled OK")
+    log.info("\n%d/%d cells compiled OK", len(results) - failures,
+             len(results))
     return 1 if failures else 0
 
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import logging
 import os
 
 from repro.data.synthetic import generate_corpus
@@ -23,7 +24,11 @@ from repro.eval import (GridSpec, SearchConfig, available_backends,
                         get_backend, get_retrieval_engine, get_sampler,
                         run_grid)
 from repro.kernels import tuning
+from repro.launch.logs import (add_logging_args, add_obs_args, init_obs,
+                               setup_logging, write_metrics)
 from repro.launch.mesh import parse_mesh
+
+log = logging.getLogger("repro.launch.evaluate")
 
 GRIDS = {
     # 3 samplers x 4 engines x 2 ks x 4 metrics = 96 cells
@@ -78,7 +83,11 @@ def main(argv=None):
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--json", default=None, metavar="PATH",
                    help="persist grid cells + fidelity report as JSON")
+    add_logging_args(p)
+    add_obs_args(p)
     args = p.parse_args(argv)
+    setup_logging(args)
+    init_obs(args)
 
     spec = GRIDS[args.grid]
     overrides = {}
@@ -115,30 +124,30 @@ def main(argv=None):
         num_queries=args.queries, qrels_per_query=args.qrels_per_query,
         num_topics=args.topics, aux_fraction=args.aux_fraction,
         vocab_size=args.vocab, query_len=24, seed=args.seed)
-    print(f"corpus: {corpus.num_entities} entities "
-          f"({corpus.num_primary} judged), {corpus.num_queries} queries")
-    print(f"grid: {len(spec.samplers)} samplers x {len(spec.engines)} "
-          f"engines x {len(spec.ks)} ks x {len(spec.metrics)} metrics "
-          f"= {spec.num_cells} cells "
-          f"(backend={args.backend}, sharded={args.sharded})")
+    log.info("corpus: %d entities (%d judged), %d queries",
+             corpus.num_entities, corpus.num_primary, corpus.num_queries)
+    log.info("grid: %d samplers x %d engines x %d ks x %d metrics "
+             "= %d cells (backend=%s, sharded=%s)",
+             len(spec.samplers), len(spec.engines), len(spec.ks),
+             len(spec.metrics), spec.num_cells, args.backend, args.sharded)
 
     result = run_grid(corpus, spec, search=search, verbose=True)
 
-    print("\ncells (sampler, engine, k, metric -> value):")
+    log.info("\ncells (sampler, engine, k, metric -> value):")
     for (s, e, k, m), v in sorted(result.cells.items()):
-        print(f"  {s:<11s} {e:<8s} k={k:<3d} {m:<10s} {v:.4f}")
+        log.info("  %-11s %-8s k=%-3d %-10s %.4f", s, e, k, m, v)
 
-    print("\nplan-trie stage counters (shared prefixes executed once):")
-    print(result.trie.summary())
+    log.info("\nplan-trie stage counters (shared prefixes executed once):")
+    log.info("%s", result.trie.summary())
 
     report = None
     if "full" in spec.samplers:
         report = build_fidelity_report(result.cells, spec)
-        print()
-        print(format_fidelity_report(report, spec))
+        log.info("\n%s", format_fidelity_report(report, spec))
     else:
-        print("\n(no 'full' sampler in the grid -> skipping the fidelity "
-              "report; add full to --samplers for deltas and Kendall-tau)")
+        log.info("\n(no 'full' sampler in the grid -> skipping the "
+                 "fidelity report; add full to --samplers for deltas and "
+                 "Kendall-tau)")
 
     curve = None
     if not args.no_backend_curve:
@@ -150,8 +159,7 @@ def main(argv=None):
         nq = min(128, qv.shape[0])
         curve = backend_recall_curve(jnp.asarray(ev), jnp.asarray(qv[:nq]),
                                      k=10)
-        print()
-        print(format_backend_curve(curve, k=10))
+        log.info("\n%s", format_backend_curve(curve, k=10))
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
@@ -162,7 +170,11 @@ def main(argv=None):
             out["backend_curve"] = curve
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)
-        print(f"\nwrote {args.json}")
+        log.info("\nwrote %s", args.json)
+    metrics_path = write_metrics(
+        args, {"plan": result.trie.metrics.snapshot()})
+    if metrics_path:
+        log.info("wrote %s", metrics_path)
 
 
 if __name__ == "__main__":

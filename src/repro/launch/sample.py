@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import logging
 import os
 
 import jax.numpy as jnp
@@ -32,7 +33,11 @@ from repro.core import (QRelTable, SamplerSession, SamplerSpec,
                         get_sampler)
 from repro.core.engines import get_engine
 from repro.data.synthetic import generate_corpus
+from repro.launch.logs import (add_logging_args, add_obs_args, init_obs,
+                               setup_logging, write_metrics)
 from repro.launch.mesh import parse_mesh
+
+log = logging.getLogger("repro.launch.sample")
 
 
 def _csv_floats(s):
@@ -75,7 +80,11 @@ def main(argv=None):
                         "(default: just --seed)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--out", default=None)
+    add_logging_args(p)
+    add_obs_args(p)
     args = p.parse_args(argv)
+    setup_logging(args)
+    init_obs(args)
     # unknown names fail with the registry's error message before any
     # corpus work — the same error contract as launch/evaluate.py
     get_sampler(args.strategy)
@@ -88,8 +97,8 @@ def main(argv=None):
         num_queries=args.queries, qrels_per_query=args.qrels_per_query,
         num_topics=args.topics, aux_fraction=args.aux_fraction,
         seed=args.seed)
-    print(f"corpus: {corpus.num_entities} entities "
-          f"({corpus.num_primary} judged), {corpus.num_queries} queries")
+    log.info("corpus: %d entities (%d judged), %d queries",
+             corpus.num_entities, corpus.num_primary, corpus.num_queries)
 
     qrels = QRelTable(*(jnp.asarray(x) for x in corpus.qrels))
     spec = SamplerSpec(
@@ -102,8 +111,8 @@ def main(argv=None):
     session = SamplerSession(qrels, num_queries=corpus.num_queries,
                              num_entities=corpus.num_entities, spec=spec)
     if args.sharded:
-        print(f"sharded graph+LP on mesh {dict(spec.mesh.shape)} "
-              f"(engine={spec.engine})")
+        log.info("sharded graph+LP on mesh %s (engine=%s)",
+                 dict(spec.mesh.shape), spec.engine)
 
     stats = {}
     if args.sweep_sizes:
@@ -111,15 +120,15 @@ def main(argv=None):
         seeds = (_csv_ints(args.sweep_seeds) if args.sweep_seeds
                  else (args.seed,))
         sweep = session.sweep(sizes, seeds)
-        print(f"sweep: {len(sizes)} sizes x {len(seeds)} seeds "
-              f"(strategy={sweep.strategy})")
+        log.info("sweep: %d sizes x %d seeds (strategy=%s)",
+                 len(sizes), len(seeds), sweep.strategy)
         for (size, seed), draw in sorted(sweep.draws.items()):
             mask = np.asarray(draw.entity_mask)
-            print(f"  size={size:<10g} seed={seed:<3d} -> "
-                  f"{int(mask.sum())} entities, "
-                  f"{int(draw.reconstructed.num_queries)} queries")
-        print("session stage counters (graph+LP staged once per sweep):")
-        print(session.summary())
+            log.info("  size=%-10g seed=%-3d -> %d entities, %d queries",
+                     size, seed, int(mask.sum()),
+                     int(draw.reconstructed.num_queries))
+        log.info("session stage counters (graph+LP staged once per sweep):")
+        log.info("%s", session.summary())
         stats["sweep"] = sweep.to_json()
         mask = np.asarray(sweep.draws[(sweep.sizes[0],
                                        sweep.seeds[0])].entity_mask)
@@ -139,20 +148,21 @@ def main(argv=None):
             edges, degrees = session.graph()
             deg = np.asarray(degrees)
             fit = fit_em(jnp.asarray(deg[deg > 0]), max_iters=300)
-            print(f"affinity graph: {int(edges.num_valid)} edges; "
-                  f"degree-law gamma = {float(fit.gamma):.3f} "
-                  f"(se {float(fit.stderr):.2e})")
+            log.info("affinity graph: %d edges; degree-law gamma = %.3f "
+                     "(se %.2e)", int(edges.num_valid), float(fit.gamma),
+                     float(fit.stderr))
             stats["gamma"] = float(fit.gamma)
         if strat.needs_labels:
             labels_arr, changes = session.labels()
             labels = np.asarray(labels_arr)
             sizes_arr = np.asarray(draw.sample.community_sizes)
             n_comm = int((sizes_arr > 0).sum())
-            print(f"{n_comm} communities; LP changes/round = "
-                  f"{np.asarray(changes).tolist()}")
+            log.info("%d communities; LP changes/round = %s", n_comm,
+                     np.asarray(changes).tolist())
             stats["communities"] = n_comm
-        print(f"sample[{args.strategy}]: {int(mask.sum())} entities, "
-              f"{int(draw.reconstructed.num_queries)} associated queries")
+        log.info("sample[%s]: %d entities, %d associated queries",
+                 args.strategy, int(mask.sum()),
+                 int(draw.reconstructed.num_queries))
 
     stats["entities"] = int(mask.sum())
     if args.out:
@@ -161,7 +171,13 @@ def main(argv=None):
                  entity_mask=mask, labels=labels, qrel_valid=recon_valid)
         with open(os.path.join(args.out, "stats.json"), "w") as f:
             json.dump(stats, f, indent=2)
-        print(f"wrote {args.out}/sample.npz")
+        log.info("wrote %s/sample.npz", args.out)
+    metrics_path = write_metrics(
+        args, {"session_stage_counts": {
+            st: {"executions": ex, "requests": rq}
+            for st, (ex, rq) in session.stage_counts().items()}})
+    if metrics_path:
+        log.info("wrote %s", metrics_path)
 
 
 if __name__ == "__main__":

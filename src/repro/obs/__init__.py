@@ -1,0 +1,18 @@
+"""Unified observability layer (DESIGN.md §12): structured span tracing,
+a metrics registry, and the shared benchmark timer.
+
+  * :mod:`repro.obs.trace`   — nested spans -> JSONL sink; strict no-op
+    when disabled (the default); ``REPRO_TRACE=<path>`` or ``--trace``
+    enables it.  Read traces back with ``python -m repro.launch.trace``.
+  * :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+    histograms with p50/p90/p99, snapshot-to-dict for JSON export.
+  * :mod:`repro.obs.timing`  — ``timeit`` (the bench timer) and
+    ``provenance`` (host/device/git identity for artifacts).
+"""
+from repro.obs import trace
+from repro.obs.metrics import (DEFAULT_BUCKETS, REGISTRY, Counter, Gauge,
+                               Histogram, Registry)
+from repro.obs.timing import git_sha, provenance, timeit
+
+__all__ = ["trace", "DEFAULT_BUCKETS", "REGISTRY", "Counter", "Gauge",
+           "Histogram", "Registry", "git_sha", "provenance", "timeit"]

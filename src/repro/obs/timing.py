@@ -1,0 +1,62 @@
+"""Shared timing + provenance helpers for the benchmark harness.
+
+``timeit`` is the one benchmark timer (DESIGN.md §12): warm up once with
+``block_until_ready`` so compilation is fully retired before t0, then
+report the mean wall microseconds of n fully-retired calls — the contract
+``benchmarks/run.py`` rows have always used, now owned by the obs layer so
+every bench and the autotuner measure the same way.
+
+``provenance`` stamps the host/device/toolchain identity (platform, JAX
+version, backend, device kind/count, git SHA) into bench and trace
+artifacts — perf trajectories across machines are uninterpretable
+without it.
+"""
+from __future__ import annotations
+
+import os
+import platform
+import subprocess
+import time
+from typing import Callable, Optional
+
+__all__ = ["git_sha", "provenance", "timeit"]
+
+
+def timeit(fn: Callable, n: int = 3) -> float:
+    """Mean wall microseconds of ``fn()`` over ``n`` fully-retired calls,
+    after one warmup call (compile + dispatch retired before timing)."""
+    import jax
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def git_sha(cwd: Optional[str] = None) -> Optional[str]:
+    """Short git SHA of the working tree (CI env fallback), else None."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=cwd,
+            capture_output=True, text=True, timeout=5)
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    sha = os.environ.get("GITHUB_SHA")
+    return sha[:12] if sha else None
+
+
+def provenance() -> dict:
+    """Host/device/toolchain identity for bench + trace artifacts."""
+    import jax
+    dev = jax.devices()[0]
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "git_sha": git_sha(os.path.dirname(os.path.abspath(__file__))),
+    }

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import tuning
+from repro.obs import trace
 from repro.retrieval.backends import get_backend
 from repro.retrieval.engines import get_retrieval_engine
 from repro.retrieval.sharded import sharded_search
@@ -91,15 +93,39 @@ class SearchSession:
             raise ValueError(
                 f"ids_map has {self.ids_map.size} entries for a corpus of "
                 f"{self.corpus_size} vectors")
-        self.index = self.engine.build(
-            key if key is not None else jax.random.PRNGKey(0), vecs)
+        with trace.jax_span(
+                "search.build",
+                compile_key=f"search.build/{cfg.engine}/{cfg.backend}",
+                engine=cfg.engine, backend=cfg.backend,
+                n=self.corpus_size) as sp:
+            self.index = self.engine.build(
+                key if key is not None else jax.random.PRNGKey(0), vecs)
+            sp.declare(self.index)
 
     def _search_chunk(self, queries: jnp.ndarray, k: int) -> np.ndarray:
-        if self.config.sharded:
-            ids = sharded_search(self.engine, self.index, queries, k=k,
-                                 mesh=self.config.mesh)[1]
-        else:
-            ids = self.engine.search(self.index, queries, k=k)
+        cfg = self.config
+        mark = tuning.resolution_mark() if trace.is_enabled() else 0
+        with trace.jax_span(
+                "search.chunk",
+                compile_key=(f"search.chunk/{cfg.engine}/{cfg.backend}/"
+                             f"{self.corpus_size}/{queries.shape[0]}/{k}"),
+                engine=cfg.engine, backend=cfg.backend,
+                n=self.corpus_size, q=int(queries.shape[0]), k=k,
+                sharded=cfg.sharded) as sp:
+            if cfg.sharded:
+                ids = sharded_search(self.engine, self.index, queries, k=k,
+                                     mesh=cfg.mesh)[1]
+            else:
+                ids = self.engine.search(self.index, queries, k=k)
+            sp.declare(ids)
+            blocks = tuning.resolutions_since(mark)
+            if blocks:
+                # block choice per kernel dispatched inside this chunk
+                # (resolution happens at trace time, so steady-state calls
+                # that hit a cached jit trace carry no tuned_blocks attr)
+                sp.set(tuned_blocks=[
+                    {"kernel": b["kernel"], "params": b["params"],
+                     "tuned": b["tuned"]} for b in blocks])
         return np.asarray(ids)
 
     def search(self, queries, *, k: int) -> np.ndarray:

@@ -14,7 +14,8 @@ correct; chunked prefill is a §Perf extension).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional
+import time
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +23,7 @@ import numpy as np
 
 from repro.models.transformer import (TransformerConfig, decode_step,
                                       init_kv_cache)
+from repro.obs import REGISTRY, trace
 from repro.retrieval.search_core import SearchConfig, SearchSession
 
 
@@ -40,9 +42,18 @@ class Request:
     remaining_prompt: int = 0
     new_tokens: int = 0
     done: bool = False
+    t_submit: float = 0.0         # perf_counter at submit (latency metrics)
+    t_done: float = 0.0           # perf_counter at completion
 
 
 class ServeEngine:
+    """Metrics (DESIGN.md §12, always on — the global obs registry):
+    ``serve.request_latency_s`` submit→complete histogram (p50/p99),
+    ``serve.tokens_per_step`` histogram + ``serve.tokens`` counter,
+    ``serve.slot_occupancy`` gauge (active/max_batch per step), and
+    ``serve.submitted`` / ``serve.completed`` / ``serve.rejected``
+    request counters."""
+
     def __init__(self, params, model_cfg: TransformerConfig,
                  cfg: ServeConfig):
         self.params = params
@@ -56,11 +67,14 @@ class ServeEngine:
     def submit(self, prompt: np.ndarray) -> Optional[Request]:
         for i, s in enumerate(self.slots):
             if s is None:
-                req = Request(prompt=prompt, remaining_prompt=len(prompt))
+                req = Request(prompt=prompt, remaining_prompt=len(prompt),
+                              t_submit=time.perf_counter())
                 self.slots[i] = req
                 # joining slot restarts its cache position
                 self.cache["pos"] = self.cache["pos"].at[i].set(0)
+                REGISTRY.counter("serve.submitted").inc()
                 return req
+        REGISTRY.counter("serve.rejected").inc()   # batch full
         return None
 
     def _next_tokens(self) -> np.ndarray:
@@ -79,16 +93,24 @@ class ServeEngine:
         number of active requests."""
         active = [i for i, r in enumerate(self.slots)
                   if r is not None and not r.done]
+        REGISTRY.gauge("serve.slot_occupancy").set(
+            len(active) / max(self.cfg.max_batch, 1))
         if not active:
             return 0
-        toks = jnp.asarray(self._next_tokens())
-        logits, self.cache = self._step(self.params, self.cache, toks)
-        if self.cfg.temperature > 0 and key is not None:
-            nxt = jax.random.categorical(
-                key, logits[:, 0] / self.cfg.temperature, axis=-1)
-        else:
-            nxt = jnp.argmax(logits[:, 0], axis=-1)
-        nxt = np.asarray(nxt)
+        with trace.jax_span("serve.step", active=len(active)) as sp:
+            toks = jnp.asarray(self._next_tokens())
+            logits, self.cache = self._step(self.params, self.cache, toks)
+            if self.cfg.temperature > 0 and key is not None:
+                nxt = jax.random.categorical(
+                    key, logits[:, 0] / self.cfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits[:, 0], axis=-1)
+            nxt = np.asarray(nxt)
+            sp.declare(nxt)
+        REGISTRY.counter("serve.tokens").inc(len(active))
+        REGISTRY.histogram("serve.tokens_per_step",
+                           buckets=tuple(range(1, 257))).observe(len(active))
+        now = time.perf_counter()
         for i in active:
             req = self.slots[i]
             if req.remaining_prompt > 0:
@@ -101,12 +123,59 @@ class ServeEngine:
                 req.new_tokens += 1
             if req.new_tokens >= self.cfg.max_new_tokens:
                 req.done = True
+                req.t_done = now
+                REGISTRY.counter("serve.completed").inc()
+                REGISTRY.histogram("serve.request_latency_s").observe(
+                    now - req.t_submit)
                 self.slots[i] = None if req.done else req
         return len(active)
 
-    def drain(self, key: Optional[jax.Array] = None):
-        while self.step(key):
-            pass
+    def state_summary(self) -> Dict[str, Any]:
+        """Engine state for diagnostics (attached to the drain guard's
+        error): per-slot progress plus the serving config bounds."""
+        return {
+            "max_batch": self.cfg.max_batch,
+            "max_new_tokens": self.cfg.max_new_tokens,
+            "slots": [None if r is None else
+                      {"remaining_prompt": r.remaining_prompt,
+                       "new_tokens": r.new_tokens, "done": r.done,
+                       "out_len": len(r.out)}
+                      for r in self.slots],
+        }
+
+    def drain(self, key: Optional[jax.Array] = None,
+              max_steps: Optional[int] = None) -> int:
+        """Step until every request completes; returns the step count.
+
+        Guarded against hanging: by default ``max_steps`` is derived from
+        the pending work — each active request needs at most
+        ``remaining_prompt + (max_new_tokens - new_tokens)`` steps, and no
+        new work can join mid-drain, so the sum over pending requests is a
+        hard upper bound.  Exceeding the bound raises ``RuntimeError``
+        with the engine state attached (``.engine_state``) instead of
+        looping forever (e.g. on a corrupted slot or a non-positive
+        ``max_new_tokens``)."""
+        if max_steps is None:
+            pending = [r for r in self.slots
+                       if r is not None and not r.done]
+            max_steps = sum(
+                r.remaining_prompt +
+                max(self.cfg.max_new_tokens - r.new_tokens, 1)
+                for r in pending)
+        steps = 0
+        with trace.span("serve.drain", max_steps=max_steps) as sp:
+            while self.step(key):
+                steps += 1
+                if steps > max_steps:
+                    state = self.state_summary()
+                    err = RuntimeError(
+                        f"ServeEngine.drain exceeded its step bound "
+                        f"({max_steps} steps for the pending work) without "
+                        f"completing every request — engine state: {state}")
+                    err.engine_state = state
+                    raise err
+            sp.set(steps=steps)
+        return steps
 
 
 class RetrievalFrontend:
@@ -129,7 +198,12 @@ class RetrievalFrontend:
 
     def retrieve(self, raw_queries, *, k: int = 3) -> np.ndarray:
         """Raw queries -> top-k ids i32[Q, k] (−1 padding for misses)."""
-        return self.session.search(self.embed_fn(raw_queries), k=k)
+        t0 = time.perf_counter()
+        ids = self.session.search(self.embed_fn(raw_queries), k=k)
+        REGISTRY.counter("serve.retrieve.queries").inc(len(ids))
+        REGISTRY.histogram("serve.retrieve_latency_s").observe(
+            time.perf_counter() - t0)
+        return ids
 
 
 class RagEngine:
@@ -149,9 +223,11 @@ class RagEngine:
         """Retrieve for one query and enqueue its RAG prompt; returns
         (request-or-None, retrieved ids i32[k])."""
         ids = self.frontend.retrieve([raw_query], k=k)[0]
+        hit = bool(ids.size and ids[0] >= 0)
+        REGISTRY.counter("serve.rag.ctx_hit" if hit
+                         else "serve.rag.ctx_miss").inc()
         ctx = (self.passage_tokens(int(ids[0]))[:self.ctx_tokens]
-               if ids.size and ids[0] >= 0 else
-               np.zeros((0,), np.int32))
+               if hit else np.zeros((0,), np.int32))
         prompt = np.concatenate([np.asarray(query_tokens, np.int32),
                                  np.asarray(ctx, np.int32)])
         return self.engine.submit(prompt), ids
