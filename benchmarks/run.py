@@ -17,6 +17,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -32,8 +33,10 @@ from repro.obs.timing import timeit as _timeit
 ROWS = []
 
 
-def row(name, us, derived):
-    ROWS.append((name, us, derived))
+def row(name, us, derived, **extra):
+    """Record one bench row; ``extra`` keys become first-class JSON columns
+    (e.g. ``peak_bytes_per_device`` on the streamed-build rows)."""
+    ROWS.append((name, us, derived, extra))
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 
@@ -277,6 +280,122 @@ def bench_retrieval():
         row(f"retrieval_recall[{r['backend']}|rf={rf}|N={n}]",
             r["us_per_call"], f"recall@{k}={r['recall_at_k']:.4f}")
 
+    # streamed shard-local build at 10x the largest global size above:
+    # weak scaling, per-shard rows constant as the shard count grows
+    _streamed_rows("retrieval", per_shard=2048 if SMOKE else 163840)
+
+
+# ---------------------------------------------------------------------------
+# Streamed shard-local build (DESIGN.md §13): weak-scaling rows — the
+# per-shard size is held constant while the shard count (and hence total
+# corpus) grows, so the per-device peak should stay flat.  Each point runs
+# in a subprocess because the host device count is fixed at backend
+# startup (XLA_FLAGS=--xla_force_host_platform_device_count=<shards>).
+# ---------------------------------------------------------------------------
+
+def _streamed_child(spec: str) -> None:
+    """Hidden subprocess entry: build one streamed session and print a
+    machine-readable result line (``STREAMED_CHILD {json}``)."""
+    kind, per_shard, shards, chunk = spec.split(":")
+    per_shard, shards, chunk = int(per_shard), int(shards), int(chunk)
+    from jax.sharding import Mesh
+    from repro.obs.memory import PEAK_GAUGE
+    from repro.obs.metrics import REGISTRY
+    devs = jax.devices()
+    if len(devs) < shards:
+        raise SystemExit(f"need {shards} devices, have {len(devs)} "
+                         f"(set XLA_FLAGS=--xla_force_host_platform_"
+                         f"device_count={shards})")
+    mesh = Mesh(np.array(devs[:shards]), ("data",))
+    out = {"kind": kind, "per_shard": per_shard, "shards": shards}
+    if kind == "retrieval":
+        from repro.retrieval.search_core import SearchConfig, SearchSession
+        d, q_n, k = 64, 64, 10
+        n = per_shard * shards
+        rng = np.random.default_rng(0)
+        vecs = rng.standard_normal((n, d)).astype(np.float32)
+        queries = jnp.asarray(
+            rng.standard_normal((q_n, d)).astype(np.float32))
+        t0 = time.time()
+        session = SearchSession(
+            vecs, SearchConfig(engine="exact", backend="jnp",
+                               streamed=True, mesh=mesh, stream_chunk=chunk),
+            key=jax.random.PRNGKey(0))
+        jax.block_until_ready(session.index)
+        out["build_us"] = (time.time() - t0) * 1e6
+        out["search_us"] = _timeit(lambda: session.search(queries, k=k))
+        out["n"] = n
+    elif kind == "sampling":
+        from repro.core import QRelTable
+        from repro.core import sampling_core as sc
+        from repro.data.synthetic import generate_corpus
+        nq = per_shard * shards
+        corpus = generate_corpus(num_queries=nq, qrels_per_query=16,
+                                 num_topics=32, aux_fraction=1.0, seed=0,
+                                 vocab_size=1024)
+        qrels = QRelTable(*(np.asarray(x) for x in corpus.qrels))
+        session = sc.SamplerSession(
+            qrels, num_queries=corpus.num_queries,
+            num_entities=corpus.num_entities,
+            spec=sc.SamplerSpec(engine="ell", streamed=True, mesh=mesh,
+                                stream_chunk=chunk,
+                                target_size=0.15 * corpus.num_primary,
+                                seed=0))
+        t0 = time.time()
+        session.labels()                    # stage shard-local graph + LP
+        out["build_us"] = (time.time() - t0) * 1e6
+        out["draw_us"] = _timeit(lambda: session.draw(seed=1).entity_mask,
+                                 n=1)
+        out["n"] = corpus.num_entities
+        out["nq"] = nq
+    else:
+        raise SystemExit(f"unknown streamed-child kind {kind!r}")
+    out["peak_bytes_per_device"] = int(REGISTRY.gauge(PEAK_GAUGE).value)
+    print("STREAMED_CHILD " + json.dumps(out), flush=True)
+
+
+def _run_streamed_point(kind: str, per_shard: int, shards: int,
+                        chunk: int = 65536) -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{shards}").strip()
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--streamed-child",
+         f"{kind}:{per_shard}:{shards}:{chunk}"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    for line in proc.stdout.splitlines():
+        if line.startswith("STREAMED_CHILD "):
+            return json.loads(line[len("STREAMED_CHILD "):])
+    raise RuntimeError(
+        f"streamed child {kind}:{per_shard}:{shards} failed "
+        f"(rc={proc.returncode}):\n{proc.stderr[-2000:]}")
+
+
+def _streamed_rows(kind: str, per_shard: int,
+                   shard_counts=(1, 2)) -> None:
+    peaks = {}
+    for shards in shard_counts:
+        r = _run_streamed_point(kind, per_shard, shards)
+        peaks[shards] = r["peak_bytes_per_device"]
+        work_us = r.get("search_us", r.get("draw_us", 0.0))
+        tag = (f"{kind}_streamed[exact|jnp|N={r['n']}|shards={shards}]"
+               if kind == "retrieval" else
+               f"{kind}_streamed[ell|nq={r['nq']}|shards={shards}]")
+        row(tag, r["build_us"],
+            f"work_us={work_us:.0f} per_shard={per_shard} "
+            f"peak_bytes_per_device={r['peak_bytes_per_device']}",
+            peak_bytes_per_device=r["peak_bytes_per_device"],
+            shards=shards, per_shard=per_shard)
+    base = max(peaks[shard_counts[0]], 1)
+    worst = max(peaks[s] / base for s in shard_counts)
+    row(f"{kind}_streamed_peak_flat", 0.0,
+        " ".join(f"s{s}={peaks[s]}" for s in shard_counts) +
+        f" worst_ratio={worst:.2f} (weak scaling: flat per-device peak)",
+        peak_ratio=worst)
+
 
 # ---------------------------------------------------------------------------
 # Sampling core: staged graph-build / LP / per-draw timings per LP engine,
@@ -348,6 +467,10 @@ def bench_sampling():
         f"draws_per_s cached={dps_cached:.1f} full={dps_full:.1f} "
         f"speedup={dps_cached / max(dps_full, 1e-9):.2f}x")
 
+    # streamed shard-local graph build at 10x the nq above: weak scaling,
+    # per-shard queries constant as the shard count grows
+    _streamed_rows("sampling", per_shard=320 if SMOKE else 12800)
+
 
 # ---------------------------------------------------------------------------
 # Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
@@ -417,7 +540,11 @@ def main() -> None:
     p.add_argument("--json", default=None, metavar="PATH",
                    help="directory to persist each section's rows as "
                         "BENCH_<name>.json (the perf trajectory record)")
+    p.add_argument("--streamed-child", default=None, help=argparse.SUPPRESS)
     args = p.parse_args()
+    if args.streamed_child:
+        _streamed_child(args.streamed_child)
+        return
     SMOKE = args.smoke
     names = args.only.split(",") if args.only else list(BENCHES)
     print("name,us_per_call,derived")
@@ -433,7 +560,7 @@ def main() -> None:
             with open(out, "w") as f:
                 json.dump({"meta": meta,
                            "rows": [{"name": r[0], "us_per_call": r[1],
-                                     "derived": r[2]}
+                                     "derived": r[2], **r[3]}
                                     for r in ROWS[start:]]},
                           f, indent=2)
             print(f"# wrote {out}", flush=True)

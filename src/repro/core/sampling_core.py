@@ -19,6 +19,11 @@ Configuration is one declarative :class:`SamplerSpec`:
     mesh-partitioned path (core/sharded_pipeline.py); draws always run on
     the replicated outputs, so a 1-device mesh is bit-identical to the
     single-device session;
+  * ``streamed``/``stream_chunk`` — shard the QRel table from birth
+    (distributed/sharded_corpus.ShardedQRels): rows are routed host-side
+    and streamed straight to their shards, so no device ever holds the
+    global table; a :class:`ShardedQRels` may also be passed directly as
+    ``qrels`` (both imply ``sharded=True``);
   * ``target_size``/``seed`` — per-draw defaults; ``target_size`` in (0, 1]
     is a fraction of the strategy's eligible universe, > 1 an absolute
     entity count, ``None`` the strategy default (paper |L|/N rule for
@@ -49,7 +54,9 @@ from repro.core import sampler as sm
 from repro.core.pipeline import WindTunnelConfig, WindTunnelResult
 from repro.core.samplers import DrawState, get_sampler
 from repro.core.sharded_pipeline import sharded_graph_and_labels
+from repro.distributed.sharded_corpus import ShardedQRels
 from repro.obs import REGISTRY, trace
+from repro.obs import memory as obs_memory
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +74,8 @@ class SamplerSpec:
     sharded: bool = False
     mesh: Any = None                      # jax.sharding.Mesh when sharded
     axes: Any = None                      # mesh axes override (sharded path)
+    streamed: bool = False                # route the QRel table shard-local
+    stream_chunk: int = 65536             # host->device streaming chunk rows
     strategy_opts: Optional[Mapping[str, Any]] = None
 
     def to_config(self) -> WindTunnelConfig:
@@ -175,7 +184,7 @@ class SamplerSession:
 
     STAGES = ("graph", "labels", "draw")
 
-    def __init__(self, qrels: gb.QRelTable, *, num_queries: int,
+    def __init__(self, qrels, *, num_queries: int,
                  num_entities: int, spec: Optional[SamplerSpec] = None,
                  **overrides):
         cfg = spec or SamplerSpec()
@@ -183,6 +192,26 @@ class SamplerSession:
             cfg = dataclasses.replace(cfg, **overrides)
         get_sampler(cfg.strategy)        # registry error UX, fail fast
         eng.get_engine(cfg.engine)       # same UX for the LP engine
+        born = qrels if isinstance(qrels, ShardedQRels) else None
+        if born is None and cfg.streamed:
+            if cfg.mesh is None:
+                raise ValueError("streamed sampling needs a mesh; pass "
+                                 "SamplerSpec(mesh=...) (launch.mesh "
+                                 "helpers)")
+            born = ShardedQRels.from_host(
+                qrels, num_queries=num_queries, num_entities=num_entities,
+                mesh=cfg.mesh, axes=cfg.axes, chunk_rows=cfg.stream_chunk)
+        if born is not None:
+            # sharded-from-birth tables force the mesh-partitioned stages
+            # (the global stages would gather what birth sharding avoids)
+            if (born.num_queries, born.num_entities) != (num_queries,
+                                                         num_entities):
+                raise ValueError(
+                    f"ShardedQRels routed for {born.num_queries} queries / "
+                    f"{born.num_entities} entities; session asked for "
+                    f"{num_queries} / {num_entities}")
+            cfg = dataclasses.replace(cfg, sharded=True, streamed=True,
+                                      mesh=born.mesh, axes=born.axes)
         if cfg.sharded:
             if cfg.mesh is None:
                 raise ValueError("sharded sampling needs a mesh; pass "
@@ -194,7 +223,11 @@ class SamplerSession:
                     f"global per-round shuffle is exactly what this path "
                     f"eliminates")
         self.spec = cfg
-        self.qrels = qrels
+        self._born = born
+        # draws run on the (routed) flat table — reconstruction and every
+        # registered strategy are row-order-free, so the born permutation
+        # is invisible downstream
+        self.qrels = born.table() if born is not None else qrels
         self.num_queries = num_queries
         self.num_entities = num_entities
         self._graph = None      # (edges, degrees)
@@ -211,15 +244,18 @@ class SamplerSession:
         plus a zero-cost ``sampling.labels`` marker with ``fused=True``,
         so per-stage aggregates list both stages on either path."""
         with trace.jax_span("sampling.graph", sharded=True,
+                            streamed=self._born is not None,
                             engine=self.spec.engine, n=self.num_entities,
                             q=self.num_queries, fused_labels=True) as sp:
             edges, labels, changes = sharded_graph_and_labels(
-                self.qrels, num_queries=self.num_queries,
+                self._born if self._born is not None else self.qrels,
+                num_queries=self.num_queries,
                 num_entities=self.num_entities, config=self.spec.to_config(),
                 mesh=self.spec.mesh, axes=self.spec.axes)
             self._graph = (edges, gb.node_degrees(edges, self.num_entities))
             self._labels = (labels, changes)
             sp.declare(self._graph, self._labels)
+        obs_memory.record_build_peak()
         with trace.span("sampling.labels", sharded=True, fused=True,
                         engine=self.spec.engine):
             pass

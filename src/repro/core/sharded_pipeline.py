@@ -48,6 +48,7 @@ from repro.core import label_prop as lp
 from repro.core import segment_utils as su
 from repro.core.pipeline import WindTunnelConfig, WindTunnelResult
 from repro.distributed import collectives as coll
+from repro.distributed.sharded_corpus import ShardedQRels
 from repro.distributed.sharding import GNN_RULES, partition_axes
 
 
@@ -92,12 +93,22 @@ def _local_lp_round(nbr_labels, wgt, own, *, use_kernel: bool):
     return pallas_round_padded(nbr_labels, wgt, own)
 
 
-def sharded_graph_and_labels(qrels: gb.QRelTable, *, num_queries: int,
+def sharded_graph_and_labels(qrels, *, num_queries: int,
                              num_entities: int, config: WindTunnelConfig,
                              mesh: Mesh, axes: tuple = None) -> tuple:
     """Mesh-partitioned graph build + label propagation (stages 1-3 above):
     one ``shard_map`` region, returning replicated ``(edges, labels,
     changes_per_round)``.
+
+    ``qrels`` is either a global :class:`~repro.core.graph_builder.
+    QRelTable` (tau-filtered and query-routed on device — the legacy flow,
+    which materialises the full table on one device first) or a
+    sharded-from-birth :class:`~repro.distributed.sharded_corpus.
+    ShardedQRels` whose buffers were routed host-side and streamed straight
+    to their shards.  On the born path tau is computed *inside* the mesh
+    from an all-gather of the score column only (O(rows) scalars, never
+    the table) — ``nanquantile`` is permutation-invariant, so the
+    threshold is bit-identical to the global ``threshold_tau``.
 
     This is the expensive staged state of the sampling core
     (``sampling_core.SamplerSession``): sampling + reconstruction are cheap
@@ -111,6 +122,9 @@ def sharded_graph_and_labels(qrels: gb.QRelTable, *, num_queries: int,
             f"sharded pipeline requires an ELL-family engine ('ell' or "
             f"'pallas'); got {config.engine!r} — the sort engine's global "
             f"per-round shuffle is exactly what this path eliminates")
+    born = isinstance(qrels, ShardedQRels)
+    if born and axes is None:
+        axes = qrels.axes
     if axes is None:
         axes = partition_axes(mesh, "nodes", GNN_RULES)
     axes = tuple(axes) if axes else ()
@@ -118,21 +132,39 @@ def sharded_graph_and_labels(qrels: gb.QRelTable, *, num_queries: int,
         raise ValueError(f"mesh {mesh} has none of the GNN node axes")
     d = _mesh_axis_count(mesh, axes)
 
-    # Global tau: the only stage needing the full score distribution — a
-    # scalar quantile, computed replicated before partitioning.
-    tau = gb.threshold_tau(qrels, config.tau_quantile)
-    kept = gb.filter_qrels(qrels, tau)
-
     qps = -(-num_queries // d)          # queries per shard (ceil)
     rows_n = -(-num_entities // d)      # nodes per shard (ceil)
     n_pad = rows_n * d
-    routed = _route_by_query(kept, num_shards=d, queries_per_shard=qps)
+    if born:
+        if qrels.num_shards != d or qrels.queries_per_shard != qps:
+            raise ValueError(
+                f"ShardedQRels routed for {qrels.num_shards} shards × "
+                f"{qrels.queries_per_shard} queries/shard, but the mesh "
+                f"needs {d} × {qps}")
+        routed = gb.QRelTable(qrels.query_ids, qrels.entity_ids,
+                              qrels.scores, qrels.valid)
+    else:
+        # Global tau: the only stage needing the full score distribution —
+        # a scalar quantile, computed replicated before partitioning.
+        tau = gb.threshold_tau(qrels, config.tau_quantile)
+        kept = gb.filter_qrels(qrels, tau)
+        routed = _route_by_query(kept, num_shards=d, queries_per_shard=qps)
     use_kernel = config.engine == "pallas"
 
     def shard_fn(q_b, e_b, s_b, v_b):
         # ---- local QRel block: (1, n) shard -> (n,) local table ----
         idx = coll.flat_axis_index(axes)
         valid = v_b[0].astype(bool)
+        if born:
+            # in-mesh tau over the gathered score COLUMN (scores only:
+            # the table itself never leaves its shards); invalid/pad rows
+            # mark NaN, which nanquantile ignores — same sorted valid
+            # multiset as the global path, so tau is bit-identical
+            marked = jnp.where(valid, s_b[0], jnp.nan)
+            tau_l = jnp.nanquantile(
+                lax.all_gather(marked, axes, axis=0, tiled=True),
+                config.tau_quantile)
+            valid = valid & (s_b[0] > tau_l)
         q_local = jnp.where(valid, q_b[0] - idx * qps, 0).astype(jnp.int32)
         local = gb.QRelTable(q_local, e_b[0], s_b[0], valid)
 
@@ -165,12 +197,28 @@ def sharded_graph_and_labels(qrels: gb.QRelTable, *, num_queries: int,
         labels, changes = lax.scan(one, labels0, None,
                                    length=config.lp_rounds)
         labels = coll.unvary_compat(labels, axes)
+        if born:
+            # Born outputs stay row-sharded: every shard computed the SAME
+            # replicated edge/label values (dedup of an identical gather;
+            # all-gathered label carry), so each keeps only its slice and
+            # the assembled global array is bit-identical to the
+            # replicated one — per-device residency drops from O(E + N)
+            # to O((E + N) / d), which is what keeps the sampling bench's
+            # peak_bytes_per_device flat under weak scaling.
+            e_len = edges.u.shape[0] // d
+            sl = lambda a: lax.dynamic_slice(a, (idx * e_len,), (e_len,))
+            edges = gb.EdgeList(sl(edges.u), sl(edges.v),
+                                sl(edges.w), sl(edges.valid))
+            labels = lax.dynamic_slice(labels, (idx * rows_n,), (rows_n,))
         return edges, labels, changes
 
     shard_spec = P(axes if len(axes) > 1 else axes[0], None)
+    row_spec = P(axes if len(axes) > 1 else axes[0])
+    out_edge = (gb.EdgeList(*(row_spec,) * 4) if born
+                else gb.EdgeList(P(), P(), P(), P()))
     fn = shard_map(shard_fn, mesh=mesh,
                    in_specs=(shard_spec,) * 4,
-                   out_specs=(gb.EdgeList(P(), P(), P(), P()), P(), P()),
+                   out_specs=(out_edge, row_spec if born else P(), P()),
                    check_rep=False)
     edges, labels, changes = fn(routed.query_ids, routed.entity_ids,
                                 routed.scores, routed.valid)

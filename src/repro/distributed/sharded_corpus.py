@@ -1,0 +1,298 @@
+"""Sharded-from-birth corpora (DESIGN.md §13).
+
+The legacy dataflow builds the full index / affinity graph on one device
+and only then partitions the *work*; corpus size is therefore capped by a
+single device's memory — exactly the regime the paper targets.  This
+module inverts the flow: a host-resident corpus is streamed, chunk by
+chunk, directly into per-device shard buffers, and everything downstream
+(per-shard index construction in ``retrieval/sharded.py``, the shard-local
+graph build in ``core/sharded_pipeline.py``) consumes the row-partitioned
+global array without ever gathering it.  Peak per-device memory is
+O(corpus / n_shards + chunk).
+
+Two birth containers:
+
+  * :class:`ShardedCorpus` — corpus vectors f32[N, D] row-partitioned over
+    a mesh axis tuple (zero rows pad the tail to ``rows_per_shard × d``;
+    pad rows carry global ids ≥ n and are masked by every consumer).
+  * :class:`ShardedQRels` — a QRel table routed by query shard at birth:
+    shard ``q // queries_per_shard`` owns every row of query q, matching
+    ``core/sharded_pipeline._route_by_query`` (same stable original-row
+    order within a shard, so downstream stable sorts see the same tie
+    order as the single-device path — the bit-parity invariant).  Buffers
+    are (d, n_buf) with global query ids; invalid rows are dropped at
+    routing time.
+
+Streaming mechanics: each device's block is copied ``chunk_rows`` rows at
+a time into a donated on-device buffer (``lax.dynamic_update_slice`` with
+``donate_argnums=0`` — no second buffer materialises), then the per-device
+buffers are assembled into one global ``jax.Array`` with
+``jax.make_array_from_single_device_arrays``.  Each shard's transfer is
+wrapped in a ``search.build.shard`` / ``sampling.graph.shard`` trace span
+so the build path is visible in ``launch/trace.py``.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (GNN_RULES, RETRIEVAL_RULES,
+                                        partition_axes)
+from repro.obs import trace
+
+__all__ = ["ShardedCorpus", "ShardedQRels", "stream_to_sharded",
+           "resolve_corpus_axes", "resolve_query_axes"]
+
+
+def _axis_count(mesh: Mesh, axes: tuple) -> int:
+    d = 1
+    for a in axes:
+        d *= mesh.shape[a]
+    return d
+
+
+def _lead(axes: tuple):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def resolve_corpus_axes(mesh: Mesh, axes: Optional[tuple]) -> tuple:
+    """Mesh axes the corpus rows partition over (retrieval rule set)."""
+    if axes is None:
+        axes = partition_axes(mesh, "corpus", RETRIEVAL_RULES)
+    axes = tuple(axes) if axes else ()
+    if not axes:
+        raise ValueError(
+            f"mesh {mesh} has none of the retrieval corpus axes "
+            f"({RETRIEVAL_RULES['corpus']})")
+    return axes
+
+
+def resolve_query_axes(mesh: Mesh, axes: Optional[tuple]) -> tuple:
+    """Mesh axes the QRel query shards partition over (GNN rule set)."""
+    if axes is None:
+        axes = partition_axes(mesh, "queries", GNN_RULES)
+    axes = tuple(axes) if axes else ()
+    if not axes:
+        raise ValueError(f"mesh {mesh} has none of the GNN query axes "
+                         f"({GNN_RULES['queries']})")
+    return axes
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _chunk_update(buf, chunk, start):
+    zeros = (jnp.int32(0),) * (chunk.ndim - 1)
+    return lax.dynamic_update_slice(buf, chunk, (start,) + zeros)
+
+
+def _stream_block(host_block: np.ndarray, device, buf_rows: int, *,
+                  chunk_rows: int):
+    """Move host rows onto one device as a ``buf_rows``-row buffer
+    (zero-padded tail), ``chunk_rows`` rows at a time, so the transient
+    footprint is the shard buffer plus one chunk."""
+    tail = host_block.shape[1:]
+    real = int(host_block.shape[0])
+    if real == buf_rows and real <= chunk_rows:
+        return jax.device_put(np.ascontiguousarray(host_block), device)
+    buf = jax.device_put(np.zeros((buf_rows,) + tail, host_block.dtype),
+                         device)
+    with warnings.catch_warnings():
+        # backends without buffer donation (CPU) warn per call; the donation
+        # is a memory optimisation, not a correctness requirement
+        warnings.filterwarnings("ignore", message=".*donated buffer.*")
+        warnings.filterwarnings("ignore", message=".*[Dd]onation.*")
+        for r0 in range(0, real, chunk_rows):
+            chunk = np.ascontiguousarray(host_block[r0:r0 + chunk_rows])
+            buf = _chunk_update(buf, jax.device_put(chunk, device),
+                                jnp.int32(r0))
+    return buf
+
+
+def _device_blocks(sharding: NamedSharding, global_shape: tuple):
+    """Ordered (device, row_start, row_stop) for a leading-dim row
+    sharding, ascending by row offset."""
+    imap = sharding.addressable_devices_indices_map(global_shape)
+    blocks = []
+    for dev, idx in imap.items():
+        sl = idx[0]
+        start = 0 if sl.start is None else int(sl.start)
+        stop = global_shape[0] if sl.stop is None else int(sl.stop)
+        blocks.append((dev, start, stop))
+    blocks.sort(key=lambda b: b[1])
+    return blocks
+
+
+def stream_to_sharded(host: np.ndarray, sharding: NamedSharding,
+                      global_shape: tuple, *, chunk_rows: int = 65536,
+                      span: Optional[str] = None, **span_attrs):
+    """Assemble a row-sharded global ``jax.Array`` of ``global_shape`` from
+    a host array (rows beyond ``host.shape[0]`` become zero padding),
+    without materialising more than one shard (+ one chunk) per device."""
+    host = np.asarray(host)
+    chunk_rows = max(1, int(chunk_rows))
+    arrays = []
+    for i, (dev, start, stop) in enumerate(
+            _device_blocks(sharding, global_shape)):
+        block = host[start:min(stop, host.shape[0])]
+        ctx = (trace.span(span, shard=i, rows=int(block.shape[0]),
+                          buf_rows=stop - start, **span_attrs)
+               if span else _NULL_CTX)
+        with ctx:
+            arrays.append(_stream_block(block, dev, stop - start,
+                                        chunk_rows=chunk_rows))
+    return jax.make_array_from_single_device_arrays(
+        global_shape, sharding, arrays)
+
+
+class _NullCtx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class ShardedCorpus(NamedTuple):
+    """Row-partitioned corpus vectors, sharded from birth.
+
+    ``vecs`` is a global ``jax.Array`` f32[rows_per_shard·d, D] row-sharded
+    over ``axes`` (zero rows pad the tail shard; their global ids are ≥ n,
+    masked by every consumer); ``n`` is the true corpus row count.
+    """
+
+    vecs: Any
+    n: int
+    mesh: Mesh
+    axes: Tuple[str, ...]
+
+    @property
+    def num_shards(self) -> int:
+        return _axis_count(self.mesh, self.axes)
+
+    @property
+    def rows_per_shard(self) -> int:
+        return self.vecs.shape[0] // self.num_shards
+
+    @property
+    def dim(self) -> int:
+        return self.vecs.shape[1]
+
+    @property
+    def pad(self) -> int:
+        return self.vecs.shape[0] - self.n
+
+    @classmethod
+    def from_host(cls, vecs, *, mesh: Mesh, axes: Optional[tuple] = None,
+                  chunk_rows: int = 65536,
+                  span: str = "search.build.shard") -> "ShardedCorpus":
+        """Stream a host-resident corpus f32[N, D] into per-shard buffers."""
+        host = np.asarray(vecs)
+        if host.ndim != 2:
+            raise ValueError(f"corpus must be 2-D (N, D); got {host.shape}")
+        host = host.astype(np.float32, copy=False)
+        axes = resolve_corpus_axes(mesh, axes)
+        d = _axis_count(mesh, axes)
+        n = int(host.shape[0])
+        rows = -(-n // d)
+        sharding = NamedSharding(mesh, P(_lead(axes), None))
+        arr = stream_to_sharded(host, sharding, (rows * d, host.shape[1]),
+                                chunk_rows=chunk_rows, span=span)
+        return cls(arr, n, mesh, axes)
+
+
+class ShardedQRels(NamedTuple):
+    """Query-routed QRel buffers, sharded from birth.
+
+    Four (d, n_buf) buffers row-sharded over ``axes``: shard
+    ``q // queries_per_shard`` owns every row of query q, in the original
+    table's row order (host-side stable routing — the same tie order
+    ``core/sharded_pipeline._route_by_query`` produces on device, which is
+    what keeps the shard-local graph build bit-consistent with the global
+    path).  Query ids are GLOBAL; invalid rows were dropped at routing
+    time; unused buffer slots have ``valid == 0``.
+    """
+
+    query_ids: Any    # i32[d, n_buf] row-sharded
+    entity_ids: Any   # i32[d, n_buf]
+    scores: Any       # f32[d, n_buf]
+    valid: Any        # i32[d, n_buf]
+    num_queries: int
+    num_entities: int
+    queries_per_shard: int
+    mesh: Mesh
+    axes: Tuple[str, ...]
+
+    @property
+    def num_shards(self) -> int:
+        return _axis_count(self.mesh, self.axes)
+
+    @property
+    def buffer_rows(self) -> int:
+        return self.query_ids.shape[1]
+
+    def table(self):
+        """The routed rows as a flat :class:`~repro.core.graph_builder.
+        QRelTable` (global query ids) — what the per-draw stages consume;
+        row order differs from the birth table, which no draw-stage
+        consumer depends on (reconstruction is row-order-free)."""
+        from repro.core.graph_builder import QRelTable
+        return QRelTable(self.query_ids.reshape(-1),
+                         self.entity_ids.reshape(-1),
+                         self.scores.reshape(-1),
+                         self.valid.reshape(-1).astype(bool))
+
+    @classmethod
+    def from_host(cls, qrels, *, num_queries: int, num_entities: int,
+                  mesh: Mesh, axes: Optional[tuple] = None,
+                  chunk_rows: int = 65536,
+                  span: str = "sampling.graph.shard") -> "ShardedQRels":
+        """Route a host-resident QRel table into per-shard buffers.
+
+        ``qrels`` is anything with ``query_ids / entity_ids / scores /
+        valid`` fields (a ``QRelTable`` or numpy equivalent).
+        """
+        q = np.asarray(qrels.query_ids).astype(np.int32, copy=False)
+        e = np.asarray(qrels.entity_ids).astype(np.int32, copy=False)
+        s = np.asarray(qrels.scores).astype(np.float32, copy=False)
+        v = np.asarray(qrels.valid).astype(bool)
+        axes = resolve_query_axes(mesh, axes)
+        d = _axis_count(mesh, axes)
+        qps = -(-int(num_queries) // d)
+        # stable routing in original row order; invalid rows -> drop bucket
+        shard = np.where(v, q // qps, d)
+        order = np.argsort(shard, kind="stable")
+        counts = np.bincount(shard[order], minlength=d + 1)[:d]
+        n_buf = max(int(counts.max()) if counts.size else 0, 1)
+        offsets = np.concatenate([[0], np.cumsum(counts)])
+        sharding = NamedSharding(mesh, P(_lead(axes), None))
+        blocks = _device_blocks(sharding, (d, n_buf))
+        bufs = {name: [] for name in ("q", "e", "s", "v")}
+        for i, (dev, start, stop) in enumerate(blocks):
+            rows = order[offsets[start]:offsets[stop]]
+            with trace.span(span, shard=i, rows=int(rows.size),
+                            buf_rows=(stop - start) * n_buf):
+                for name, field, dtype in (("q", q, np.int32),
+                                           ("e", e, np.int32),
+                                           ("s", s, np.float32),
+                                           ("v", v, np.int32)):
+                    block = np.zeros((stop - start, n_buf), dtype)
+                    # rows grouped per owned shard, original order kept
+                    for j, sh in enumerate(range(start, stop)):
+                        owned = order[offsets[sh]:offsets[sh + 1]]
+                        block[j, :owned.size] = field[owned]
+                    bufs[name].append(_stream_block(
+                        block, dev, stop - start, chunk_rows=chunk_rows))
+        mk = functools.partial(jax.make_array_from_single_device_arrays,
+                               (d, n_buf), sharding)
+        return cls(mk(bufs["q"]), mk(bufs["e"]), mk(bufs["s"]),
+                   mk(bufs["v"]), int(num_queries), int(num_entities),
+                   qps, mesh, axes)

@@ -6,6 +6,7 @@ through the trie-shared plan executor and prints the sample-fidelity report.
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --json results/eval.json
   PYTHONPATH=src python -m repro.launch.evaluate --engines exact,lsh --ks 3,10,20
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --backend pallas --sharded --mesh host
+  PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --streamed --mesh auto
   PYTHONPATH=src python -m repro.launch.evaluate --grid smoke --backend int8 --no-tuned-kernels
 """
 from __future__ import annotations
@@ -62,9 +63,16 @@ def main(argv=None):
     p.add_argument("--sharded", action="store_true",
                    help="run index search mesh-partitioned through "
                         "retrieval/sharded.py")
+    p.add_argument("--streamed", action="store_true",
+                   help="shard each corpus from birth: stream it chunk-wise "
+                        "into per-device buffers and build the index "
+                        "shard-locally (retrieval/sharded.sharded_build; "
+                        "implies --sharded)")
+    p.add_argument("--stream-chunk", type=int, default=65536,
+                   help="host->device streaming chunk rows for --streamed")
     p.add_argument("--mesh", default="host",
-                   help="mesh for --sharded: host (1-device, production "
-                        "axis names) or auto (all local devices)")
+                   help="mesh for --sharded/--streamed: host (1-device, "
+                        "production axis names) or auto (all local devices)")
     p.add_argument("--no-tuned-kernels", action="store_true",
                    help="CLI escape hatch: ignore the autotuned block table "
                         "(kernels/tuning.py) and use the hard-coded kernel "
@@ -116,9 +124,12 @@ def main(argv=None):
     get_backend(args.backend)
     if args.no_tuned_kernels:
         tuning.set_table(None)      # force hard-coded kernel defaults
-    search = SearchConfig(backend=args.backend, sharded=args.sharded,
-                          mesh=parse_mesh(args.mesh) if args.sharded
-                          else None)
+    search = SearchConfig(backend=args.backend,
+                          sharded=args.sharded or args.streamed,
+                          streamed=args.streamed,
+                          stream_chunk=args.stream_chunk,
+                          mesh=(parse_mesh(args.mesh)
+                                if args.sharded or args.streamed else None))
 
     corpus = generate_corpus(
         num_queries=args.queries, qrels_per_query=args.qrels_per_query,

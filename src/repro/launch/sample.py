@@ -68,9 +68,16 @@ def main(argv=None):
                    help="run the mesh-partitioned graph+LP stages "
                         "(core/sharded_pipeline.py; requires an ELL-family "
                         "engine)")
+    p.add_argument("--streamed", action="store_true",
+                   help="shard the qrel table from birth: route host-side, "
+                        "stream per-shard buffers to their devices, and "
+                        "build the graph shard-locally — no device ever "
+                        "holds the global table (implies --sharded)")
+    p.add_argument("--stream-chunk", type=int, default=65536,
+                   help="host->device streaming chunk rows for --streamed")
     p.add_argument("--mesh", default="host", choices=["host", "auto"],
-                   help="mesh for --sharded: 1-device host mesh or all "
-                        "local devices on the data axis")
+                   help="mesh for --sharded/--streamed: 1-device host mesh "
+                        "or all local devices on the data axis")
     p.add_argument("--sweep-sizes", default=None, metavar="S1,S2,...",
                    help="comma list of target sizes (<=1: fraction of the "
                         "eligible universe; >1: entity count); runs "
@@ -89,8 +96,8 @@ def main(argv=None):
     # corpus work — the same error contract as launch/evaluate.py
     get_sampler(args.strategy)
     get_engine(args.engine)
-    if args.sharded and args.engine == "sort":
-        p.error("--sharded requires an ELL-family engine; "
+    if (args.sharded or args.streamed) and args.engine == "sort":
+        p.error("--sharded/--streamed require an ELL-family engine; "
                 "pass --engine ell or --engine pallas")
 
     corpus = generate_corpus(
@@ -106,12 +113,15 @@ def main(argv=None):
         tau_quantile=args.tau_quantile, fanout=args.fanout,
         lp_rounds=args.lp_rounds,
         target_size=args.target_frac * corpus.num_primary, seed=args.seed,
-        sharded=args.sharded,
-        mesh=parse_mesh(args.mesh) if args.sharded else None)
+        sharded=args.sharded or args.streamed,
+        streamed=args.streamed, stream_chunk=args.stream_chunk,
+        mesh=(parse_mesh(args.mesh)
+              if args.sharded or args.streamed else None))
     session = SamplerSession(qrels, num_queries=corpus.num_queries,
                              num_entities=corpus.num_entities, spec=spec)
-    if args.sharded:
-        log.info("sharded graph+LP on mesh %s (engine=%s)",
+    if args.sharded or args.streamed:
+        log.info("%s graph+LP on mesh %s (engine=%s)",
+                 "streamed shard-local" if args.streamed else "sharded",
                  dict(spec.mesh.shape), spec.engine)
 
     stats = {}

@@ -8,11 +8,14 @@ a metrics registry, and the shared benchmark timer.
     histograms with p50/p90/p99, snapshot-to-dict for JSON export.
   * :mod:`repro.obs.timing`  — ``timeit`` (the bench timer) and
     ``provenance`` (host/device/git identity for artifacts).
+  * :mod:`repro.obs.memory`  — per-device resident-bytes accounting and
+    the ``build.peak_bytes_per_device`` gauge for the streaming build path.
 """
-from repro.obs import trace
+from repro.obs import memory, trace
 from repro.obs.metrics import (DEFAULT_BUCKETS, REGISTRY, Counter, Gauge,
                                Histogram, Registry)
 from repro.obs.timing import git_sha, provenance, timeit
 
-__all__ = ["trace", "DEFAULT_BUCKETS", "REGISTRY", "Counter", "Gauge",
-           "Histogram", "Registry", "git_sha", "provenance", "timeit"]
+__all__ = ["memory", "trace", "DEFAULT_BUCKETS", "REGISTRY", "Counter",
+           "Gauge", "Histogram", "Registry", "git_sha", "provenance",
+           "timeit"]

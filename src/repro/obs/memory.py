@@ -1,0 +1,78 @@
+"""Per-device memory accounting for the streaming build path (DESIGN.md
+§13).
+
+The sharded-from-birth corpus machinery exists to keep per-device memory
+O(corpus / n_shards + chunk); this module is how that claim is *observed*
+rather than asserted.  :func:`bytes_per_device` reads the allocator's
+high-water mark where the platform exposes one (``device.memory_stats()``
+on TPU/GPU), and falls back to summing the addressable shards of every
+live ``jax.Array`` per device elsewhere (the CPU backend reports no
+allocator stats) — the fallback is an instantaneous residency figure, not
+a true peak, but it is exactly what the build keeps resident, which is the
+quantity the streaming path bounds.
+
+:func:`record_build_peak` publishes the worst device as the
+``build.peak_bytes_per_device`` gauge; the session front doors call it
+after every index / graph build so the figure lands in ``--metrics-json``
+exports and the benchmark rows (benchmarks/run.py ``peak_bytes_per_device``
+column).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.obs.metrics import REGISTRY, Registry
+
+__all__ = ["PEAK_GAUGE", "bytes_per_device", "record_build_peak"]
+
+#: gauge name for the per-device build high-water mark
+PEAK_GAUGE = "build.peak_bytes_per_device"
+
+
+def _allocator_stats(device) -> Optional[int]:
+    try:
+        stats = device.memory_stats()
+    except Exception:  # platform without allocator stats (CPU)
+        return None
+    if not stats:
+        return None
+    for key in ("peak_bytes_in_use", "bytes_in_use"):
+        if key in stats:
+            return int(stats[key])
+    return None
+
+
+def bytes_per_device() -> Dict[str, int]:
+    """device -> resident bytes: allocator peak where available, live-array
+    shard accounting otherwise."""
+    devices = jax.local_devices()
+    per = {}
+    for dev in devices:
+        val = _allocator_stats(dev)
+        if val is None:
+            break
+        per[str(dev)] = val
+    else:
+        return per
+    # fallback: sum the addressable shards of every live array per device
+    per = {str(dev): 0 for dev in devices}
+    for arr in jax.live_arrays():
+        try:
+            shards = arr.addressable_shards
+        except Exception:
+            continue
+        for sh in shards:
+            key = str(sh.device)
+            if key in per and sh.data is not None:
+                per[key] += int(sh.data.nbytes)
+    return per
+
+
+def record_build_peak(registry: Registry = REGISTRY) -> int:
+    """Publish max-over-devices resident bytes as the build gauge."""
+    per = bytes_per_device()
+    peak = max(per.values(), default=0)
+    registry.gauge(PEAK_GAUGE).set(peak)
+    return int(peak)

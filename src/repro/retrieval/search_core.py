@@ -36,21 +36,34 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.sharded_corpus import ShardedCorpus
 from repro.kernels import tuning
 from repro.obs import trace
+from repro.obs import memory as obs_memory
 from repro.retrieval.backends import get_backend
 from repro.retrieval.engines import get_retrieval_engine
-from repro.retrieval.sharded import sharded_search
+from repro.retrieval.sharded import sharded_build, sharded_search
 
 
 @dataclasses.dataclass(frozen=True)
 class SearchConfig:
-    """Declarative search-core configuration (engine × backend × shard)."""
+    """Declarative search-core configuration (engine × backend × shard).
+
+    ``streamed=True`` shards the corpus from birth: the host array is
+    streamed chunk-wise into per-device buffers
+    (distributed/sharded_corpus.ShardedCorpus) and the index is built
+    per shard (retrieval/sharded.sharded_build) — no device ever holds
+    the global corpus or the global index.  Passing a ``ShardedCorpus``
+    directly as ``corpus_vecs`` has the same effect; both imply
+    ``sharded=True``.
+    """
 
     engine: str = "exact"
     backend: str = "jnp"
     sharded: bool = False
     mesh: Any = None              # jax.sharding.Mesh when sharded
+    streamed: bool = False        # shard-local build from birth
+    stream_chunk: int = 65536     # host->device streaming chunk rows
     query_chunk: int = 256
     engine_opts: Optional[Mapping[str, Any]] = None
 
@@ -74,10 +87,24 @@ class SearchSession:
             cfg = dataclasses.replace(cfg, **overrides)
         engine = get_retrieval_engine(cfg.engine)   # registry error UX
         get_backend(cfg.backend)                    # fail fast, same UX
+        born = corpus_vecs if isinstance(corpus_vecs, ShardedCorpus) else None
+        if born is None and cfg.streamed:
+            if cfg.mesh is None:
+                raise ValueError("streamed build needs a mesh; pass "
+                                 "SearchConfig(mesh=...) (launch.mesh "
+                                 "helpers)")
+            born = ShardedCorpus.from_host(corpus_vecs, mesh=cfg.mesh,
+                                           chunk_rows=cfg.stream_chunk)
+        if born is not None:
+            # a sharded-from-birth corpus forces the sharded query plans
+            cfg = dataclasses.replace(cfg, sharded=True, streamed=True,
+                                      mesh=born.mesh)
         if cfg.sharded and cfg.mesh is None:
             raise ValueError("sharded search needs a mesh; pass "
                              "SearchConfig(mesh=...) (launch.mesh helpers)")
-        if cfg.sharded and cfg.backend == "int8":
+        if cfg.sharded and cfg.backend == "int8" and born is None:
+            # lifted on the born path (per-shard scales + float rerank);
+            # the global-partition path keeps the rejection (DESIGN.md §13)
             raise ValueError(
                 "sharded search does not support the 'int8' backend (the "
                 "row-shard padding sentinel would destroy the quantization "
@@ -86,8 +113,12 @@ class SearchSession:
             engine = dataclasses.replace(engine, **dict(cfg.engine_opts))
         self.config = cfg
         self.engine = dataclasses.replace(engine, backend=cfg.backend)
-        vecs = jnp.asarray(corpus_vecs)
-        self.corpus_size = int(vecs.shape[0])
+        self._born = born
+        if born is not None:
+            self.corpus_size = born.n
+        else:
+            vecs = jnp.asarray(corpus_vecs)
+            self.corpus_size = int(vecs.shape[0])
         self.ids_map = None if ids_map is None else np.asarray(ids_map)
         if self.ids_map is not None and self.ids_map.size != self.corpus_size:
             raise ValueError(
@@ -97,10 +128,15 @@ class SearchSession:
                 "search.build",
                 compile_key=f"search.build/{cfg.engine}/{cfg.backend}",
                 engine=cfg.engine, backend=cfg.backend,
-                n=self.corpus_size) as sp:
-            self.index = self.engine.build(
-                key if key is not None else jax.random.PRNGKey(0), vecs)
+                n=self.corpus_size, streamed=born is not None,
+                shards=born.num_shards if born is not None else 1) as sp:
+            bkey = key if key is not None else jax.random.PRNGKey(0)
+            if born is not None:
+                self.index = sharded_build(self.engine, born, bkey)
+            else:
+                self.index = self.engine.build(bkey, vecs)
             sp.declare(self.index)
+        obs_memory.record_build_peak()
 
     def _search_chunk(self, queries: jnp.ndarray, k: int) -> np.ndarray:
         cfg = self.config
