@@ -473,6 +473,96 @@ def bench_sampling():
 
 
 # ---------------------------------------------------------------------------
+# Serving tier (DESIGN.md §14): load-generator rows — throughput + p50/p99
+# vs offered load, microbatch size and tenant count, plus the headline
+# microbatched-vs-serial throughput ratio.  Latencies come off each
+# request's completion future (the serve.request_latency_s data), so the
+# bench measures exactly what the scheduler observes.
+# ---------------------------------------------------------------------------
+
+def bench_serve():
+    from repro.retrieval.search_core import SearchConfig
+    from repro.serve import (IngestConfig, LoadSpec, SchedulerConfig,
+                             SearchServer, run_load)
+
+    docs = 2048 if SMOKE else 16384
+    d = 64
+    n_req = 64 if SMOKE else 512
+    rng = np.random.default_rng(0)
+    corpora = {}
+
+    def provider(tenant):
+        if tenant not in corpora:
+            corpora[tenant] = rng.normal(size=(docs, d)).astype(np.float32)
+        return corpora[tenant]
+
+    queries = rng.normal(size=(min(n_req, 256), d)).astype(np.float32)
+
+    def make_server(max_batch, tenants):
+        server = SearchServer(
+            provider, config=SearchConfig(engine="exact", backend="jnp"),
+            scheduler=SchedulerConfig(max_queue=max(n_req, 256),
+                                      max_batch=max_batch, k_max=16),
+            ingest=IngestConfig(compact_threshold=10 ** 9),
+            max_tenants=max(tenants, 8))
+        # warm every bucket shape so the rows measure steady state, not
+        # the one-off XLA compiles the bucket set exists to amortise
+        for t in range(tenants):
+            for b in server.scheduler.config.bucket_set():
+                for i in range(b):
+                    server.submit(queries[i % queries.shape[0]],
+                                  tenant=f"tenant-{t}")
+                server.tick()
+        server.drain()
+        return server
+
+    def load_row(tag, max_batch, tenants, rate):
+        server = make_server(max_batch, tenants)
+        rep = run_load(server.scheduler, queries,
+                       LoadSpec(n_requests=n_req, rate=rate,
+                                tenants=tenants, k=10))
+        rate_s = "inf" if not np.isfinite(rate) else f"{rate:g}"
+        row(f"serve_load[{tag}|rate={rate_s}|batch={max_batch}"
+            f"|tenants={tenants}]",
+            rep.p50_s * 1e6,
+            f"thr={rep.throughput_rps:.1f}rps p99={rep.p99_s * 1e3:.2f}ms "
+            f"mean_batch={rep.mean_batch:.1f}",
+            throughput_rps=rep.throughput_rps, p50_s=rep.p50_s,
+            p99_s=rep.p99_s, offered_rate=(None if not np.isfinite(rate)
+                                           else rate),
+            max_batch=max_batch, tenants=tenants,
+            completed=rep.completed, rejected=rep.rejected)
+        return rep
+
+    # offered-load sweep at the full microbatch
+    batched = None
+    for rate in ((float("inf"),) if SMOKE
+                 else (500.0, 2000.0, float("inf"))):
+        rep = load_row("load_sweep", 32, 1, rate)
+        if not np.isfinite(rate):
+            batched = rep
+    # microbatch-size sweep (batch=1 is the serial baseline: one search
+    # dispatch per request, the pre-scheduler serving path)
+    serial = None
+    for mb in ((1, 8) if SMOKE else (1, 4, 8, 32)):
+        rep = load_row("batch_sweep", mb, 1, float("inf"))
+        if mb == 1:
+            serial = rep
+        if SMOKE and mb == 8:
+            batched = rep
+    # tenant-count sweep (per-tenant sessions via the TenantCache)
+    for tenants in ((2,) if SMOKE else (2, 4)):
+        load_row("tenant_sweep", 32, tenants, float("inf"))
+
+    ratio = batched.throughput_rps / max(serial.throughput_rps, 1e-9)
+    row("serve_microbatch_speedup", 0.0,
+        f"serial={serial.throughput_rps:.1f}rps "
+        f"batched={batched.throughput_rps:.1f}rps ratio={ratio:.2f}x",
+        ratio=ratio, serial_rps=serial.throughput_rps,
+        batched_rps=batched.throughput_rps)
+
+
+# ---------------------------------------------------------------------------
 # Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)
 # ---------------------------------------------------------------------------
 
@@ -506,6 +596,7 @@ BENCHES = {
     "eval": bench_eval,
     "retrieval": bench_retrieval,
     "sampling": bench_sampling,
+    "serve": bench_serve,
     "roofline": bench_roofline,
 }
 
@@ -529,7 +620,7 @@ def run_autotune() -> None:
 def main() -> None:
     global SMOKE
     p = argparse.ArgumentParser()
-    p.add_argument("--only", default=None,
+    p.add_argument("--only", "--section", dest="only", default=None,
                    help="comma-separated subset of " + ",".join(BENCHES))
     p.add_argument("--smoke", action="store_true",
                    help="reduced sweep (CI: smallest corpus, 2 engines)")

@@ -47,8 +47,8 @@ from repro.distributed.sharding import (GNN_RULES, RETRIEVAL_RULES,
                                         partition_axes)
 from repro.obs import trace
 
-__all__ = ["ShardedCorpus", "ShardedQRels", "stream_to_sharded",
-           "resolve_corpus_axes", "resolve_query_axes"]
+__all__ = ["ShardedCorpus", "ShardedQRels", "sharded_row_buffer",
+           "stream_to_sharded", "resolve_corpus_axes", "resolve_query_axes"]
 
 
 def _axis_count(mesh: Mesh, axes: tuple) -> int:
@@ -207,6 +207,31 @@ class ShardedCorpus(NamedTuple):
         arr = stream_to_sharded(host, sharding, (rows * d, host.shape[1]),
                                 chunk_rows=chunk_rows, span=span)
         return cls(arr, n, mesh, axes)
+
+
+def sharded_row_buffer(host_rows: np.ndarray, *, capacity: int, dim: int,
+                       mesh: Mesh, axes: Optional[tuple] = None,
+                       chunk_rows: int = 65536,
+                       span: str = "serve.ingest.shard"):
+    """Fixed-capacity row-sharded append buffer (the serving tier's
+    live-ingest structure, DESIGN.md §14): the first ``len(host_rows)``
+    global rows carry the pending documents, the remainder is zeroed spare
+    capacity.  Same geometry and streaming mechanics as a sharded-from-birth
+    corpus — per-device blocks filled ``chunk_rows`` at a time — so the
+    buffer is just one more shard-local structure next to the frozen index.
+    Returns a global row-sharded jax.Array f32[ceil(capacity/d)·d, dim];
+    which rows are live is the caller's dynamic ``n_valid`` scalar
+    (retrieval/sharded.sharded_buffer_topk), so appends never retrace."""
+    host = np.asarray(host_rows, np.float32).reshape(-1, dim)
+    if host.shape[0] > capacity:
+        raise ValueError(f"{host.shape[0]} pending rows exceed the buffer "
+                         f"capacity {capacity}")
+    axes = resolve_corpus_axes(mesh, axes)
+    d = _axis_count(mesh, axes)
+    rows = -(-max(int(capacity), 1) // d)
+    sharding = NamedSharding(mesh, P(_lead(axes), None))
+    return stream_to_sharded(host, sharding, (rows * d, dim),
+                             chunk_rows=chunk_rows, span=span)
 
 
 class ShardedQRels(NamedTuple):

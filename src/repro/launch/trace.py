@@ -51,12 +51,19 @@ def _percentile(sorted_vals: List[float], p: float) -> float:
     return sorted_vals[lo] + (pos - lo) * (sorted_vals[hi] - sorted_vals[lo])
 
 
-def aggregate(spans: Iterable[dict]) -> Dict[str, dict]:
+def aggregate(spans: Iterable[dict], *,
+              prefix: Optional[str] = None) -> Dict[str, dict]:
     """name -> {count, total_s, mean_s, p50_s, p99_s, first_count,
-    compile_s, compile_share, errors}."""
+    compile_s, compile_share, errors}.  ``prefix`` keeps only span names
+    under one namespace (e.g. ``serve.`` isolates the serving tier's
+    ``serve.tick``/``serve.batch``/``serve.compact`` spans from a trace
+    that also recorded builds and evals)."""
     by_name: Dict[str, List[dict]] = {}
     for rec in spans:
-        by_name.setdefault(rec.get("name", "?"), []).append(rec)
+        name = rec.get("name", "?")
+        if prefix is not None and not name.startswith(prefix):
+            continue
+        by_name.setdefault(name, []).append(rec)
     out: Dict[str, dict] = {}
     for name, recs in sorted(by_name.items()):
         durs = sorted(float(r.get("dur_s", 0.0)) for r in recs)
@@ -109,13 +116,16 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="write {spans, stages} JSON to PATH ('-' = stdout)")
     p.add_argument("--sort", default="total", choices=("name", "total"),
                    help="table order (default: total time, descending)")
+    p.add_argument("--filter", default=None, metavar="PREFIX",
+                   help="only aggregate span names starting with PREFIX "
+                        "(e.g. 'serve.' for the serving tier)")
     args = p.parse_args(argv)
     try:
         spans = load_spans(args.path)
     except OSError as e:
         print(f"error: cannot read trace: {e}", file=sys.stderr)
         return 2
-    aggs = aggregate(spans)
+    aggs = aggregate(spans, prefix=args.filter)
     if args.json:
         payload = json.dumps({"spans": len(spans), "stages": aggs}, indent=2)
         if args.json == "-":

@@ -33,8 +33,14 @@ from typing import Dict, Iterable, Optional, Sequence, Tuple
 __all__ = ["Counter", "Gauge", "Histogram", "Registry", "REGISTRY",
            "DEFAULT_BUCKETS"]
 
-#: default histogram upper bounds (seconds): 100 µs .. 60 s latency ladder
+#: default histogram upper bounds (seconds): 1 µs .. 60 s latency ladder.
+#: The sub-100 µs rungs exist for the serving tier — a warm microbatched
+#: search on a small tenant completes in tens of microseconds, and a
+#: ladder that starts at 100 µs reports every such request as "< 1e-4",
+#: making p50 vs p99 indistinguishable exactly where the scheduler's
+#: batching decisions show up.
 DEFAULT_BUCKETS: Tuple[float, ...] = (
+    1e-6, 2.5e-6, 5e-6, 1e-5, 2.5e-5, 5e-5,
     1e-4, 2.5e-4, 5e-4, 1e-3, 2.5e-3, 5e-3, 1e-2, 2.5e-2, 5e-2,
     0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0)
 

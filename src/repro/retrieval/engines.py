@@ -16,6 +16,12 @@ An engine implements the :class:`RetrievalEngine` protocol:
     vectors (f32[N, D]); returns an engine-private index pytree.
   * ``search(index, queries, k)`` — ANN/exact top-k; returns i32[Q, k] ids
     into the ``vecs`` the index was built from (−1 padding for misses).
+  * ``search_scored(index, queries, k)`` — the scored variant ``search``
+    slices: (scores f32[Q, k], ids i32[Q, k]).  Scores are inner products
+    (for lsh: only when ``rerank > 0`` — the no-rerank path returns
+    positive Hamming distances), which is what lets the serving tier's
+    live append buffers merge engine results with a fresh exact scan
+    (serve/ingest.py) by comparing scores across the two sources.
 
 Registered engines:
 
@@ -65,6 +71,11 @@ class RetrievalEngine(Protocol):
         """Queries f32[Q, D] -> top-k ids i32[Q, k] into the built corpus."""
         ...
 
+    def search_scored(self, index: Any, queries: jnp.ndarray, *,
+                      k: int) -> Any:
+        """Queries f32[Q, D] -> (scores f32[Q, k], ids i32[Q, k])."""
+        ...
+
 
 _REGISTRY: Dict[str, RetrievalEngine] = {}
 
@@ -104,8 +115,11 @@ class ExactEngine:
         return get_backend(self.backend).prepare_corpus(vecs)
 
     def search(self, index, queries, *, k: int):
+        return self.search_scored(index, queries, k=k)[1]
+
+    def search_scored(self, index, queries, *, k: int):
         return exact_topk(queries, index, k=k, block=self.block,
-                          backend=self.backend)[1]
+                          backend=self.backend)
 
 
 @register_retrieval_engine
@@ -126,9 +140,12 @@ class IVFFlatEngine:
                              cap_factor=self.cap_factor)
 
     def search(self, index, queries, *, k: int):
+        return self.search_scored(index, queries, k=k)[1]
+
+    def search_scored(self, index, queries, *, k: int):
         nprobe = min(self.nprobe, index.centroids.shape[0])
         return search_ivfflat(index, queries, k=k, nprobe=nprobe,
-                              backend=self.backend)[1]
+                              backend=self.backend)
 
 
 @register_retrieval_engine
@@ -146,10 +163,13 @@ class LSHEngine:
         return build_lsh(key, vecs, n_bits=self.n_bits)
 
     def search(self, index, queries, *, k: int):
+        return self.search_scored(index, queries, k=k)[1]
+
+    def search_scored(self, index, queries, *, k: int):
         n = index.codes.shape[0]
         rerank = min(max(self.rerank, k), n) if self.rerank > 0 else 0
         return search_lsh(index, queries, k=k, rerank=rerank,
-                          backend=self.backend)[1]
+                          backend=self.backend)
 
 
 class TfIdfIndex(NamedTuple):
@@ -180,5 +200,8 @@ class TfIdfEngine:
             vecs * w[None, :]), w)
 
     def search(self, index, queries, *, k: int):
+        return self.search_scored(index, queries, k=k)[1]
+
+    def search_scored(self, index, queries, *, k: int):
         return exact_topk(queries, index.vecs, k=k, block=self.block,
-                          backend=self.backend)[1]
+                          backend=self.backend)

@@ -138,7 +138,7 @@ class SearchSession:
             sp.declare(self.index)
         obs_memory.record_build_peak()
 
-    def _search_chunk(self, queries: jnp.ndarray, k: int) -> np.ndarray:
+    def _search_chunk(self, queries: jnp.ndarray, k: int):
         cfg = self.config
         mark = tuning.resolution_mark() if trace.is_enabled() else 0
         with trace.jax_span(
@@ -149,10 +149,11 @@ class SearchSession:
                 n=self.corpus_size, q=int(queries.shape[0]), k=k,
                 sharded=cfg.sharded) as sp:
             if cfg.sharded:
-                ids = sharded_search(self.engine, self.index, queries, k=k,
-                                     mesh=cfg.mesh)[1]
+                scores, ids = sharded_search(self.engine, self.index,
+                                             queries, k=k, mesh=cfg.mesh)
             else:
-                ids = self.engine.search(self.index, queries, k=k)
+                scores, ids = self.engine.search_scored(self.index, queries,
+                                                        k=k)
             sp.declare(ids)
             blocks = tuning.resolutions_since(mark)
             if blocks:
@@ -162,22 +163,38 @@ class SearchSession:
                 sp.set(tuned_blocks=[
                     {"kernel": b["kernel"], "params": b["params"],
                      "tuned": b["tuned"]} for b in blocks])
-        return np.asarray(ids)
+        return np.asarray(scores), np.asarray(ids)
 
-    def search(self, queries, *, k: int) -> np.ndarray:
-        """Top-k ids i32[Q, k] for a query batch (−1 padding for misses);
-        chunked by ``query_chunk``, mapped through ``ids_map`` when set."""
+    def search_scored(self, queries, *, k: int):
+        """(scores f32[Q, k], ids i32[Q, k]) for a query batch — −inf/−1
+        padding for misses, chunked by ``query_chunk``, ids mapped through
+        ``ids_map`` when set.  Scores are the engine's final ranking scores
+        (inner products for every engine except no-rerank lsh, which ranks
+        by positive Hamming distance), which is what the serving tier's
+        live-ingest merge (serve/ingest.py) compares against its append
+        buffer's exact scan."""
         q = np.asarray(queries)
         k_eff = max(1, min(k, self.corpus_size))
         chunk = self.config.query_chunk
         parts = [self._search_chunk(jnp.asarray(q[i:i + chunk]), k_eff)
                  for i in range(0, q.shape[0], chunk)]
-        local = (np.concatenate(parts, 0) if parts
-                 else np.zeros((0, k_eff), np.int32))
+        if parts:
+            scores = np.concatenate([p[0] for p in parts], 0)
+            local = np.concatenate([p[1] for p in parts], 0)
+        else:
+            scores = np.full((0, k_eff), -np.inf, np.float32)
+            local = np.zeros((0, k_eff), np.int32)
         if k_eff < k:
+            scores = np.pad(scores, ((0, 0), (0, k - k_eff)),
+                            constant_values=-np.inf)
             local = np.pad(local, ((0, 0), (0, k - k_eff)),
                            constant_values=-1)
-        if self.ids_map is None:
-            return local
-        return np.where(local >= 0, self.ids_map[np.clip(local, 0, None)],
-                        -1)
+        if self.ids_map is not None:
+            local = np.where(local >= 0,
+                             self.ids_map[np.clip(local, 0, None)], -1)
+        return scores, local
+
+    def search(self, queries, *, k: int) -> np.ndarray:
+        """Top-k ids i32[Q, k] for a query batch (−1 padding for misses);
+        chunked by ``query_chunk``, mapped through ``ids_map`` when set."""
+        return self.search_scored(queries, k=k)[1]

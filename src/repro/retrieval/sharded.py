@@ -668,6 +668,40 @@ def _search_born_ivf(engine, index: ShardedIVFIndex, queries, *, k: int,
                          index.centroids, queries), k)
 
 
+def sharded_buffer_topk(buf_vecs, n_valid, queries, *, k: int, mesh: Mesh,
+                        axes: Optional[tuple] = None, id_base: int = 0):
+    """Dense exact top-k over a fixed-capacity row-sharded append buffer
+    (the serving tier's live-ingest structure, DESIGN.md §14).
+
+    ``buf_vecs`` is a row-sharded f32[cap·d, D] buffer (rows at global
+    position ≥ ``n_valid`` are unused capacity); ``n_valid`` is a DYNAMIC
+    scalar — appends grow it without changing any traced shape, so the
+    steady-state serve loop never recompiles as rows land.  Scores are
+    plain f32 inner products (buffers are small; quantization is a
+    bandwidth optimisation for the big frozen index, not the tail), ids
+    come back offset by ``id_base`` (the frozen corpus size), and the
+    per-shard partials merge through the same all-gather + ``lax.top_k``
+    path every sharded engine plan uses."""
+    axes = _resolve_axes(mesh, axes)
+    d = _axis_count(mesh, axes)
+    rows = buf_vecs.shape[0] // d
+    k_l = min(k, rows)
+
+    def f(v_l, q, nv):
+        row0 = coll.flat_axis_index(axes) * rows
+        gid = row0 + jnp.arange(rows, dtype=jnp.int32)
+        s = (q @ v_l.T).astype(jnp.float32)
+        s = jnp.where((gid < nv)[None, :], s, -jnp.inf)
+        top_s, pos = lax.top_k(s, k_l)
+        top_i = jnp.where(jnp.isfinite(top_s), id_base + row0 + pos, -1)
+        return _merge(top_s, top_i, axes, k)
+
+    fn = shard_map(f, mesh=mesh,
+                   in_specs=(_row_spec(axes, 2), P(None, None), P()),
+                   out_specs=(P(), P()), check_rep=False)
+    return _pad_topk(*fn(buf_vecs, queries, jnp.int32(n_valid)), k)
+
+
 def _born_search(engine, index, queries, *, k: int, mesh, axes):
     if isinstance(index, ShardedFlatIndex):
         return _search_born_rows(get_backend(engine.backend), index.vecs,

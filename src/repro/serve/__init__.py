@@ -1,4 +1,12 @@
-from repro.serve.engine import (RagEngine, RetrievalFrontend, ServeConfig,
-                                ServeEngine)
+from repro.serve.engine import (RagEngine, RetrievalFrontend, SearchServer,
+                                ServeConfig, ServeEngine)
+from repro.serve.ingest import IngestConfig, LiveIndex
+from repro.serve.loadgen import LoadReport, LoadSpec, run_load
+from repro.serve.scheduler import (MicrobatchScheduler, PendingResult,
+                                   SchedulerConfig)
+from repro.serve.tenants import LRUCache, TenantCache
 
-__all__ = ["ServeEngine", "ServeConfig", "RetrievalFrontend", "RagEngine"]
+__all__ = ["ServeEngine", "ServeConfig", "RetrievalFrontend", "RagEngine",
+           "SearchServer", "IngestConfig", "LiveIndex", "LoadSpec",
+           "LoadReport", "run_load", "MicrobatchScheduler", "PendingResult",
+           "SchedulerConfig", "LRUCache", "TenantCache"]

@@ -1,0 +1,407 @@
+"""Serving-tier tests (DESIGN.md §14): microbatch scheduler admission /
+FIFO / fixed-shape dispatch, per-tenant LRU session cache, live shard-local
+ingest with append-then-search parity against a from-scratch rebuild
+(every engine x jnp+int8 backend), background compaction that never
+stalls or staleness-misses a search, the frontend's bounded context
+cache, and the serve.* span/metric surfaces."""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.obs import trace
+from repro.obs.metrics import DEFAULT_BUCKETS, Registry
+from repro.retrieval.search_core import SearchConfig, SearchSession
+from repro.serve import ingest as ingest_mod
+from repro.serve import (IngestConfig, LiveIndex, LoadSpec,
+                         MicrobatchScheduler, RetrievalFrontend,
+                         SchedulerConfig, SearchServer, TenantCache,
+                         run_load)
+
+D = 16
+
+
+def _corpus(n, seed=0, dim=D):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32)
+
+
+def _sparse(n, seed=0, dim=D):
+    """Non-negative sparse rows (tfidf-shaped data with real df variation)."""
+    rng = np.random.default_rng(seed)
+    x = np.abs(rng.normal(size=(n, dim))).astype(np.float32)
+    x[x < 0.8] = 0.0
+    return x
+
+
+def _sets(ids):
+    return [set(int(i) for i in row if i >= 0) for row in ids]
+
+
+# ---------------------------------------------------------------------------
+# live ingest: append-then-search parity vs from-scratch rebuild
+# ---------------------------------------------------------------------------
+
+# exact-recall hyper-parameters per engine: the parity criterion is
+# set-equality with a full rebuild, so ANN engines run in their exhaustive
+# configurations (probe all lists / rerank everything)
+ENGINE_OPTS = {
+    "exact": None,
+    "tfidf": None,
+    "ivfflat": {"n_lists": 4, "nprobe": 64},
+    "lsh": {"n_bits": 256, "rerank": 10 ** 6},
+}
+
+
+@pytest.mark.parametrize("backend", ["jnp", "int8"])
+@pytest.mark.parametrize("engine", sorted(ENGINE_OPTS))
+def test_append_then_search_matches_rebuild(engine, backend):
+    make = _sparse if engine == "tfidf" else _corpus
+    base, extra = make(120, seed=1), make(45, seed=2)
+    queries = make(6, seed=3)
+    cfg = SearchConfig(engine=engine, backend=backend,
+                       engine_opts=ENGINE_OPTS[engine])
+    li = LiveIndex(base, cfg, ingest=IngestConfig(
+        append_cap=8, compact_threshold=10 ** 9))
+    start, stop = li.append(extra)
+    assert (start, stop) == (120, 165)
+    rebuilt = SearchSession(np.concatenate([base, extra]), cfg)
+    live_ids = li.search(queries, k=10)
+    full_ids = rebuilt.search(queries, k=10)
+    assert _sets(live_ids) == _sets(full_ids)
+    # scores of the merged ranking are ordered and finite at k <= n
+    scores, _ = li.search_scored(queries, k=10)
+    assert np.isfinite(scores).all()
+    assert (np.diff(scores, axis=1) <= 1e-5).all()
+
+
+def test_live_index_multiple_appends_and_capacity_growth():
+    base = _corpus(64, seed=0)
+    li = LiveIndex(base, SearchConfig(), ingest=IngestConfig(
+        append_cap=4, compact_threshold=10 ** 9))
+    chunks = [_corpus(7, seed=s + 10) for s in range(5)]
+    for c in chunks:
+        li.append(c)                      # forces repeated buffer growth
+    assert li.pending_rows == 35 and li.n == 99
+    rebuilt = SearchSession(np.concatenate([base] + chunks), SearchConfig())
+    q = _corpus(4, seed=99)
+    assert _sets(li.search(q, k=12)) == _sets(rebuilt.search(q, k=12))
+
+
+def test_live_index_k_larger_than_corpus_pads():
+    li = LiveIndex(_corpus(5), SearchConfig(),
+                   ingest=IngestConfig(compact_threshold=10 ** 9))
+    li.append(_corpus(3, seed=4))
+    scores, ids = li.search_scored(_corpus(2, seed=5), k=12)
+    assert ids.shape == (2, 12)
+    assert (ids[:, :8] >= 0).all() and (ids[:, 8:] == -1).all()
+    assert np.isinf(scores[:, 8:]).all()
+
+
+def test_live_index_streamed_sharded_path():
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = SearchConfig(engine="exact", streamed=True, mesh=mesh)
+    base, extra = _corpus(96, seed=6), _corpus(33, seed=7)
+    li = LiveIndex(base, cfg, ingest=IngestConfig(
+        append_cap=16, compact_threshold=10 ** 9))
+    li.append(extra)
+    rebuilt = SearchSession(np.concatenate([base, extra]), cfg)
+    q = _corpus(5, seed=8)
+    assert _sets(li.search(q, k=10)) == _sets(rebuilt.search(q, k=10))
+    li.compact(background=False)
+    assert li.pending_rows == 0 and li.frozen_n == 129
+    assert _sets(li.search(q, k=10)) == _sets(rebuilt.search(q, k=10))
+
+
+def test_live_index_rejects_no_rerank_lsh():
+    with pytest.raises(ValueError, match="rerank"):
+        LiveIndex(_corpus(64), SearchConfig(
+            engine="lsh", engine_opts={"rerank": 0}))
+
+
+def test_compaction_threshold_triggers_and_preserves_ids():
+    reg = Registry()
+    li = LiveIndex(_corpus(50, seed=0), SearchConfig(),
+                   ingest=IngestConfig(append_cap=8, compact_threshold=10,
+                                       background=False), registry=reg)
+    li.append(_corpus(6, seed=1))
+    assert li.pending_rows == 6            # below threshold: no compaction
+    start, stop = li.append(_corpus(6, seed=2))
+    assert (start, stop) == (56, 62)
+    assert li.pending_rows == 0 and li.frozen_n == 62
+    assert reg.counter("serve.ingest.compactions").value == 1
+    # ids are stable across the compaction: a third append continues on
+    start, stop = li.append(_corpus(3, seed=3))
+    assert (start, stop) == (62, 65)
+
+
+def test_searches_succeed_during_background_compaction(monkeypatch):
+    """The compaction state machine's core guarantee: while the rebuild is
+    in flight, searches keep answering from the old snapshot and see every
+    appended row (no stale-index miss, no error, no stall)."""
+    base, extra = _corpus(80, seed=0), _corpus(30, seed=1)
+    queries = _corpus(4, seed=2)
+    li = LiveIndex(base, SearchConfig(), ingest=IngestConfig(
+        append_cap=64, compact_threshold=10 ** 9))
+    li.append(extra)
+    expect = _sets(li.search(queries, k=10))
+
+    started, release = threading.Event(), threading.Event()
+    real_session = ingest_mod.SearchSession
+
+    class BlockingSession(real_session):
+        def __init__(self, *a, **kw):
+            started.set()
+            assert release.wait(timeout=30)
+            super().__init__(*a, **kw)
+
+    monkeypatch.setattr(ingest_mod, "SearchSession", BlockingSession)
+    assert li.compact(background=True)
+    assert started.wait(timeout=30)
+    # rebuild is mid-flight and parked; searches must not block or miss
+    for _ in range(3):
+        assert _sets(li.search(queries, k=10)) == expect
+    # appends mid-compaction stay searchable and survive the swap
+    late = _corpus(5, seed=3)
+    li.append(late)
+    release.set()
+    li.flush()
+    assert li.frozen_n == 110 and li.pending_rows == 5
+    rebuilt = real_session(np.concatenate([base, extra, late]),
+                           SearchConfig())
+    assert _sets(li.search(queries, k=10)) == _sets(
+        rebuilt.search(queries, k=10))
+
+
+def test_background_compaction_failure_surfaces(monkeypatch):
+    li = LiveIndex(_corpus(40), SearchConfig(), ingest=IngestConfig(
+        append_cap=8, compact_threshold=10 ** 9))
+    li.append(_corpus(4, seed=1))
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected build failure")
+
+    monkeypatch.setattr(ingest_mod, "SearchSession", boom)
+    li.compact(background=True)
+    with pytest.raises(RuntimeError, match="compaction failed"):
+        li.flush()
+    # error is consumed; the index keeps serving from the old snapshot
+    assert li.search(_corpus(2, seed=2), k=5).shape == (2, 5)
+
+
+# ---------------------------------------------------------------------------
+# microbatch scheduler: admission, FIFO, fixed shapes, futures
+# ---------------------------------------------------------------------------
+
+def test_scheduler_rejects_when_full_and_serves_fifo():
+    reg = Registry()
+    session = SearchSession(_corpus(64), SearchConfig())
+    sched = MicrobatchScheduler(
+        lambda t: session,
+        SchedulerConfig(max_queue=6, max_batch=2, k_max=5), registry=reg)
+    reqs = [sched.submit(_corpus(1, seed=i)[0], k=3) for i in range(9)]
+    admitted = [r for r in reqs if r is not None]
+    assert len(admitted) == 6 and reqs[6:] == [None] * 3
+    assert reg.counter("serve.queue.rejected").value == 3
+    assert sched.drain() == 6
+    assert reg.counter("serve.queue.completed").value == 6
+    # FIFO: completion order follows admission order
+    times = [r.completed_at for r in admitted]
+    assert times == sorted(times)
+    for r in admitted:
+        scores, ids = r.result(timeout=0)
+        assert scores.shape == (3,) and ids.shape == (3,)
+
+
+def test_scheduler_results_match_direct_search():
+    session = SearchSession(_corpus(128, seed=0), SearchConfig())
+    sched = MicrobatchScheduler(lambda t: session,
+                                SchedulerConfig(max_batch=4, k_max=8),
+                                registry=Registry())
+    queries = _corpus(6, seed=1)
+    reqs = [sched.submit(q, k=5) for q in queries]
+    sched.drain()
+    direct_s, direct_i = session.search_scored(queries, k=5)
+    for i, r in enumerate(reqs):
+        scores, ids = r.result(timeout=0)
+        np.testing.assert_array_equal(ids, direct_i[i])
+        np.testing.assert_allclose(scores, direct_s[i], rtol=1e-5)
+
+
+def test_scheduler_batches_per_tenant_in_order():
+    calls = []
+
+    class Spy:
+        def __init__(self, session):
+            self.session = session
+
+        def search_scored(self, q, *, k):
+            calls.append(np.asarray(q).shape[0])
+            return self.session.search_scored(q, k=k)
+
+    spy = Spy(SearchSession(_corpus(64), SearchConfig()))
+    sched = MicrobatchScheduler(lambda t: spy,
+                                SchedulerConfig(max_batch=8, k_max=4),
+                                registry=Registry())
+    order = ["a", "a", "b", "a", "b"]
+    reqs = [sched.submit(_corpus(1, seed=i)[0], tenant=t)
+            for i, t in enumerate(order)]
+    # tick 1: all of tenant a (head of line), padded to bucket 4;
+    # tick 2: tenant b, padded to bucket 2
+    assert sched.tick() == 3 and calls[-1] == 4
+    assert [r.done for r in reqs] == [True, True, False, True, False]
+    assert sched.tick() == 2 and calls[-1] == 2
+    assert all(r.done for r in reqs)
+
+
+def test_scheduler_k_bounds_and_failure_propagates():
+    sched = MicrobatchScheduler(lambda t: None,
+                                SchedulerConfig(k_max=4), registry=Registry())
+    with pytest.raises(ValueError, match="k_max"):
+        sched.submit(np.zeros(D, np.float32), k=9)
+
+    class Broken:
+        def search_scored(self, q, *, k):
+            raise RuntimeError("engine exploded")
+
+    sched = MicrobatchScheduler(lambda t: Broken(),
+                                SchedulerConfig(k_max=4), registry=Registry())
+    req = sched.submit(np.zeros(D, np.float32), k=2)
+    sched.tick()
+    with pytest.raises(RuntimeError, match="engine exploded"):
+        req.result(timeout=0)
+
+
+def test_loadgen_completes_and_reports():
+    session = SearchSession(_corpus(128), SearchConfig())
+    sched = MicrobatchScheduler(lambda t: session,
+                                SchedulerConfig(max_batch=8, k_max=8),
+                                registry=Registry())
+    rep = run_load(sched, _corpus(8, seed=1),
+                   LoadSpec(n_requests=32, k=5, tenants=2))
+    assert rep.completed == 32 and rep.rejected == 0
+    assert rep.throughput_rps > 0
+    assert rep.p50_s <= rep.p99_s
+    assert set(rep.to_row()) >= {"throughput_rps", "p50_s", "p99_s"}
+
+
+# ---------------------------------------------------------------------------
+# tenant cache: LRU eviction, observable, transparently rebuilt
+# ---------------------------------------------------------------------------
+
+def test_tenant_cache_evicts_lru_and_rebuilds_identically():
+    reg = Registry()
+    builds = []
+
+    def provider(tenant):
+        builds.append(tenant)
+        return SearchSession(_corpus(64, seed=hash(tenant) % 100),
+                             SearchConfig())
+
+    cache = TenantCache(provider, capacity=2, registry=reg)
+    q = _corpus(3, seed=5)
+    first = cache.get("t1").search(q, k=5)
+    cache.get("t2"), cache.get("t1")          # t1 most recent
+    assert cache.get("t3") is not None        # evicts t2 (LRU)
+    assert set(cache.resident) == {"t1", "t3"}
+    assert reg.counter("serve.tenant.evict").value == 1
+    assert reg.counter("serve.tenant.miss").value == 3
+    # re-admission is a rebuild (miss), and results are identical
+    again = cache.get("t2").search(q, k=5)
+    assert builds == ["t1", "t2", "t3", "t2"]
+    np.testing.assert_array_equal(
+        again, SearchSession(_corpus(64, seed=hash("t2") % 100),
+                             SearchConfig()).search(q, k=5))
+    # t2's re-admission evicted t1 (LRU); its rebuild is transparent too
+    np.testing.assert_array_equal(
+        first, cache.get("t1").search(q, k=5))
+    assert reg.counter("serve.tenant.hit").value == 1
+    assert reg.counter("serve.tenant.evict").value == 3
+    assert reg.gauge("serve.tenant.resident_bytes").value >= 0
+
+
+def test_search_server_end_to_end_with_ingest():
+    server = SearchServer(
+        lambda t: _corpus(64, seed=len(t)),
+        scheduler=SchedulerConfig(max_batch=4, k_max=8),
+        ingest=IngestConfig(append_cap=8, compact_threshold=10 ** 9),
+        max_tenants=2)
+    reqs = [server.submit(_corpus(1, seed=i)[0], k=4,
+                          tenant=f"t{i % 3}") for i in range(6)]
+    assert server.drain() == 6
+    assert all(r.done for r in reqs)
+    start, stop = server.append("t0", _corpus(16, seed=9))
+    assert (start, stop) == (64, 80)
+    req = server.submit(_corpus(1, seed=42)[0], k=4, tenant="t0")
+    server.drain()
+    assert req.result(timeout=0)[1].shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# frontend context cache: bounded, observable, correct after eviction
+# ---------------------------------------------------------------------------
+
+def test_frontend_ctx_cache_bounds_memory_and_revalidates():
+    from repro.obs import REGISTRY
+    evict0 = REGISTRY.counter("serve.ctx.evict").value
+    fe = RetrievalFrontend(_corpus(64), lambda q: np.asarray(q),
+                           ctx_cache_size=2)
+    queries = _corpus(5, seed=1)
+    first = fe.retrieve(queries, k=4)
+    assert len(fe._ctx_cache) <= 2            # eviction caps the cache
+    assert REGISTRY.counter("serve.ctx.evict").value - evict0 == 3
+    # re-retrieval of evicted queries recomputes identical contexts
+    np.testing.assert_array_equal(first, fe.retrieve(queries, k=4))
+    # and a genuinely cached query short-circuits to the same answer
+    np.testing.assert_array_equal(first[-1:],
+                                  fe.retrieve(queries[-1:], k=4))
+
+
+def test_frontend_live_ingest_append_invalidates_ctx_cache():
+    fe = RetrievalFrontend(_corpus(32, seed=0), lambda q: np.asarray(q),
+                           ctx_cache_size=8,
+                           ingest=IngestConfig(compact_threshold=10 ** 9))
+    target = _corpus(1, seed=7) * 10.0        # dominant-score doc
+    before = fe.retrieve(target, k=3)
+    fe.append(target)                          # the doc itself joins
+    after = fe.retrieve(target, k=3)
+    assert 32 in after[0].tolist()             # new row is visible
+    assert not np.array_equal(before, after)
+
+
+# ---------------------------------------------------------------------------
+# observability: serve spans aggregate, default buckets resolve sub-ms
+# ---------------------------------------------------------------------------
+
+def test_serve_spans_aggregate_with_filter(tmp_path):
+    from repro.launch.trace import aggregate, load_spans
+    path = str(tmp_path / "trace.jsonl")
+    trace.enable(path)
+    try:
+        session = SearchSession(_corpus(64), SearchConfig())
+        sched = MicrobatchScheduler(lambda t: session,
+                                    SchedulerConfig(max_batch=4, k_max=4),
+                                    registry=Registry())
+        for i in range(5):
+            sched.submit(_corpus(1, seed=i)[0], k=2)
+        sched.drain()
+    finally:
+        trace.disable()
+    aggs = aggregate(load_spans(path), prefix="serve.")
+    assert {"serve.tick", "serve.batch"} <= set(aggs)
+    assert all(name.startswith("serve.") for name in aggs)
+    assert aggs["serve.tick"]["count"] >= 2
+    assert aggs["serve.tick"]["p99_s"] >= aggs["serve.tick"]["p50_s"]
+
+
+def test_default_buckets_resolve_microseconds():
+    assert DEFAULT_BUCKETS[0] <= 1e-6
+    assert list(DEFAULT_BUCKETS) == sorted(DEFAULT_BUCKETS)
+    # at least five rungs below the old 100 µs floor: a 30 µs serving
+    # latency must land in a real bucket, not the bottom catch-all
+    assert sum(1 for b in DEFAULT_BUCKETS if b < 1e-4) >= 5
+    reg = Registry()
+    h = reg.histogram("serve.request_latency_s")
+    h.observe(3e-5)
+    assert h.uppers[0] <= 1e-6
