@@ -1,0 +1,2 @@
+"""Shim package so ``python -m launch.lint`` (the documented short form)
+resolves with only ``src`` on PYTHONPATH; delegates to repro.launch."""

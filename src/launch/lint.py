@@ -1,0 +1,7 @@
+"""``python -m launch.lint`` — thin alias for repro.launch.lint."""
+import sys
+
+from repro.launch.lint import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""AST-based contract analyzer (DESIGN.md §15).
+
+Machine-checks the invariants the runtime layers rely on: JAX trace /
+retrace hazards, buffer-donation safety, lock discipline across the
+serving tier, and registry-protocol conformance.  Run it with::
+
+    PYTHONPATH=src python -m repro.launch.lint src/repro
+    PYTHONPATH=src python -m repro.launch.lint --imports
+"""
+from repro.analysis.core import (Finding, LintRule, Module, Project,
+                                 analyze, available_rules, get_rule,
+                                 load_baseline, load_default_rules,
+                                 new_findings, register_rule, save_baseline)
+
+__all__ = ["Finding", "LintRule", "Module", "Project", "analyze",
+           "available_rules", "get_rule", "load_baseline",
+           "load_default_rules", "new_findings", "register_rule",
+           "save_baseline"]

@@ -1,0 +1,551 @@
+"""JAX contract rules (DESIGN.md §15): trace hazards and donation safety.
+
+Rule family 1 — trace hazards inside ``jit`` / ``shard_map`` bodies:
+
+  * ``jax-host-cast``       (error)   ``float()``/``int()``/``bool()``/
+    ``.item()``/``np.asarray()`` applied to a traced value forces a device
+    sync inside the trace (or a ``TracerConversionError`` at runtime).
+  * ``jax-traced-branch``   (error)   Python ``if``/``while``/ternary on a
+    traced value — a concretization error at trace time; use ``jnp.where``
+    / ``lax.cond``.
+  * ``jax-unbounded-static`` (warning) a call site of a jitted function
+    passes a *static* argument whose value set is not provably bounded —
+    every distinct value is a fresh trace + XLA compile (the retrace
+    amplifier the scheduler's bucket set exists to prevent).  Values are
+    known-static when they are literals, ALL_CAPS constants, shapes/dims,
+    ``min(...)`` clamps, bucket lookups (anything resolved through the
+    ``kernels/tuning.py`` size buckets), or the tuned block kwargs
+    (``block_q``/``block_n``/... — ``tuning.resolve`` draws them from a
+    finite table keyed by the SIZE_BUCKETS boundaries).
+
+Rule family 2 — donation/aliasing safety:
+
+  * ``jax-donated-reuse``   (error)   an argument passed at a donated
+    position is read again after the call: XLA may have reused its buffer,
+    so the read observes garbage.
+  * ``serve-donated-append`` (error)  the LiveIndex contract: in ``serve/``
+    modules, a jitted buffer-update function (``dynamic_update_slice``
+    writes) must NOT donate — an in-flight search on another thread may
+    still hold the previous buffer (serve/ingest.py documents this; the
+    lock covers the swap, not the compute).
+
+Tracedness is a forward, lexical dataflow over each traced function body:
+parameters (minus the declared static ones) seed the traced set; names
+assigned from traced expressions join it; ``.shape``/``.ndim``/``.dtype``
+and ``len()`` projections are static and leave it.  The analysis is
+deliberately intraprocedural — precise enough for the kernels/serve idioms
+in this repo, with ``# lint: disable=`` as the reviewed escape hatch.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import (Finding, Module, Project, arg_names,
+                                 call_name, iter_functions, register_rule)
+
+__all__ = ["JitInfo", "traced_functions", "TUNED_BLOCK_KWARGS"]
+
+
+def _tuned_block_kwargs() -> frozenset:
+    """Block-kwarg names the autotuner dispatches (cross-referenced from
+    kernels/tuning.py so tuned kwargs are known-static: resolve() draws
+    them from a finite table keyed by the SIZE_BUCKETS boundaries)."""
+    from repro.kernels.tuning import DEFAULTS
+    return frozenset(k for params in DEFAULTS.values() for k in params)
+
+
+TUNED_BLOCK_KWARGS = _tuned_block_kwargs()
+
+#: attribute projections of an array that are static under tracing
+_STATIC_ATTRS = frozenset({"shape", "ndim", "dtype", "size", "sharding"})
+
+_HOST_CASTS = frozenset({"float", "int", "bool", "complex"})
+_HOST_CALLS = frozenset({"np.asarray", "np.array", "numpy.asarray",
+                         "numpy.array", "onp.asarray"})
+_HOST_METHODS = frozenset({"item", "tolist", "__bool__", "__float__"})
+
+
+@dataclasses.dataclass(frozen=True)
+class JitInfo:
+    """What a jit/shard_map wrapping declares about its function."""
+
+    kind: str                      # "jit" | "shard_map"
+    static_argnames: Tuple[str, ...] = ()
+    static_argnums: Tuple[int, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def _const_strings(node: ast.AST) -> Tuple[str, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    return ()
+
+
+def _const_ints(node: ast.AST) -> Tuple[int, ...]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, int))
+    return ()
+
+
+def _jit_call_info(call: ast.Call) -> Optional[JitInfo]:
+    """JitInfo when ``call`` is jax.jit(...)/jit(...) or a
+    functools.partial(jax.jit, ...) wrapping; None otherwise."""
+    name = call_name(call)
+    if name is None:
+        return None
+    base = name.split(".")[-1]
+    if base == "partial" and call.args:
+        inner = call.args[0]
+        inner_name = (inner.id if isinstance(inner, ast.Name)
+                      else inner.attr if isinstance(inner, ast.Attribute)
+                      else None)
+        if inner_name not in ("jit", "shard_map"):
+            return None
+        kind = "jit" if inner_name == "jit" else "shard_map"
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        return JitInfo(
+            kind=kind,
+            static_argnames=_const_strings(kw.get("static_argnames",
+                                                  ast.Constant(None))),
+            static_argnums=_const_ints(kw.get("static_argnums",
+                                              ast.Constant(None))),
+            donate_argnums=_const_ints(kw.get("donate_argnums",
+                                              ast.Constant(None))))
+    if base in ("jit", "shard_map"):
+        kw = {k.arg: k.value for k in call.keywords if k.arg}
+        return JitInfo(
+            kind="jit" if base == "jit" else "shard_map",
+            static_argnames=_const_strings(kw.get("static_argnames",
+                                                  ast.Constant(None))),
+            static_argnums=_const_ints(kw.get("static_argnums",
+                                              ast.Constant(None))),
+            donate_argnums=_const_ints(kw.get("donate_argnums",
+                                              ast.Constant(None))))
+    return None
+
+
+def traced_functions(module: Module) -> Dict[str, Tuple[ast.AST, JitInfo]]:
+    """qualname -> (funcdef, JitInfo) for every function this module puts
+    under a trace: decorated defs, defs passed to jit()/shard_map() calls,
+    and ``g = jax.jit(f, ...)`` module-level wrappings (keyed by the
+    *wrapper* name too, for call-site rules)."""
+    out: Dict[str, Tuple[ast.AST, JitInfo]] = {}
+    defs: Dict[str, List[Tuple[str, ast.AST]]] = {}
+    for qual, fn, _cls in iter_functions(module.tree):
+        defs.setdefault(fn.name, []).append((qual, fn))
+        for dec in fn.decorator_list:
+            info = None
+            if isinstance(dec, ast.Call):
+                info = _jit_call_info(dec)
+            elif (name := (dec.id if isinstance(dec, ast.Name)
+                           else dec.attr if isinstance(dec, ast.Attribute)
+                           else None)) in ("jit", "shard_map"):
+                info = JitInfo(kind="jit" if name == "jit" else "shard_map")
+            if info is not None:
+                out[qual] = (fn, info)
+    # functions passed into jit(f, ...) / shard_map(f, ...) call sites,
+    # and wrapper bindings `g = jax.jit(f, ...)`
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        if name is None or name.split(".")[-1] not in ("jit", "shard_map"):
+            continue
+        info = _jit_call_info(node)
+        if info is None or not node.args:
+            continue
+        target = node.args[0]
+        if isinstance(target, ast.Name) and target.id in defs:
+            for qual, fn in defs[target.id]:
+                out.setdefault(qual, (fn, info))
+    # wrapper name bindings: g = jax.jit(f, ...) at any assignment
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            info = _jit_call_info(node.value)
+            if info is None or not node.value.args:
+                continue
+            inner = node.value.args[0]
+            if not isinstance(inner, ast.Name) or inner.id not in defs:
+                continue
+            _, fn = defs[inner.id][0]
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    out.setdefault(tgt.name if hasattr(tgt, "name")
+                                   else tgt.id, (fn, info))
+    return out
+
+
+def _static_params(fn: ast.AST, info: JitInfo) -> Set[str]:
+    names = arg_names(fn)
+    static = set(info.static_argnames)
+    for i in info.static_argnums:
+        if 0 <= i < len(names):
+            static.add(names[i])
+    return static
+
+
+class _Tracedness:
+    """Forward lexical dataflow: which names hold traced values."""
+
+    def __init__(self, fn: ast.AST, info: JitInfo):
+        self.traced: Set[str] = set(arg_names(fn)) - _static_params(fn, info)
+
+    def expr_traced(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Constant):
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            if node.attr in _STATIC_ATTRS:
+                return False
+            return self.expr_traced(node.value)
+        if isinstance(node, ast.Call):
+            name = call_name(node) or ""
+            if name == "len" or name.split(".")[-1] in ("range", "zip",
+                                                        "enumerate"):
+                return False
+            # method calls propagate the receiver: x.sum() is traced iff x is
+            recv = (self.expr_traced(node.func.value)
+                    if isinstance(node.func, ast.Attribute) else False)
+            return recv or \
+                any(self.expr_traced(a) for a in node.args) or \
+                any(self.expr_traced(k.value) for k in node.keywords)
+        if isinstance(node, (ast.BinOp, ast.BoolOp, ast.Compare,
+                             ast.UnaryOp, ast.Subscript, ast.IfExp,
+                             ast.Tuple, ast.List, ast.Starred)):
+            return any(self.expr_traced(c) for c in ast.iter_child_nodes(node)
+                       if isinstance(c, ast.expr))
+        return False
+
+    def feed(self, stmt: ast.stmt) -> None:
+        """Propagate through one assignment statement."""
+        if isinstance(stmt, ast.Assign) and self.expr_traced(stmt.value):
+            for tgt in stmt.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        self.traced.add(n.id)
+        elif isinstance(stmt, ast.AugAssign) and \
+                self.expr_traced(stmt.value):
+            if isinstance(stmt.target, ast.Name):
+                self.traced.add(stmt.target.id)
+
+
+def _is_none_check(test: ast.AST) -> bool:
+    return (isinstance(test, ast.Compare)
+            and any(isinstance(op, (ast.Is, ast.IsNot))
+                    for op in test.ops))
+
+
+def _body_statements(fn: ast.AST) -> Iterable[ast.stmt]:
+    """Statements of a def in source order, skipping nested defs (they
+    trace separately if jitted)."""
+
+    def walk(stmts):
+        for s in stmts:
+            if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef)):
+                continue
+            yield s
+            for field in ("body", "orelse", "finalbody", "handlers"):
+                sub = getattr(s, field, None)
+                if sub:
+                    for item in sub:
+                        if isinstance(item, ast.ExceptHandler):
+                            yield from walk(item.body)
+                        elif isinstance(item, ast.stmt):
+                            yield from walk([item])
+
+    yield from walk(getattr(fn, "body", []))
+
+
+@register_rule
+class HostCastRule:
+    """float()/int()/bool()/.item()/np.asarray() on traced values."""
+
+    id = "jax-host-cast"
+    severity = "error"
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for module in project.modules:
+            for qual, (fn, info) in traced_functions(module).items():
+                if not hasattr(fn, "body"):
+                    continue
+                flow = _Tracedness(fn, info)
+                for stmt in _body_statements(fn):
+                    for node in ast.walk(stmt):
+                        if not isinstance(node, ast.Call):
+                            continue
+                        name = call_name(node) or ""
+                        is_cast = (name in _HOST_CASTS
+                                   or name in _HOST_CALLS)
+                        is_method = (isinstance(node.func, ast.Attribute)
+                                     and node.func.attr in _HOST_METHODS)
+                        if not (is_cast or is_method):
+                            continue
+                        target = (node.func.value if is_method
+                                  else node.args[0] if node.args else None)
+                        if target is not None and \
+                                flow.expr_traced(target):
+                            what = (f".{node.func.attr}()" if is_method
+                                    else f"{name}()")
+                            yield Finding(
+                                self.id, self.severity, module.path,
+                                node.lineno, symbol=qual,
+                                message=(
+                                    f"{what} on a traced value inside a "
+                                    f"{info.kind} body forces a host sync "
+                                    f"(or fails to trace); keep it in jnp "
+                                    f"or hoist the cast out of the trace"))
+                    flow.feed(stmt)
+
+
+@register_rule
+class TracedBranchRule:
+    """Python control flow on traced values inside a trace."""
+
+    id = "jax-traced-branch"
+    severity = "error"
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for module in project.modules:
+            for qual, (fn, info) in traced_functions(module).items():
+                if not hasattr(fn, "body"):
+                    continue
+                flow = _Tracedness(fn, info)
+                for stmt in _body_statements(fn):
+                    tests = []
+                    if isinstance(stmt, (ast.If, ast.While)):
+                        tests.append(stmt.test)
+                    for node in ast.walk(stmt):
+                        if isinstance(node, ast.IfExp):
+                            tests.append(node.test)
+                    for test in tests:
+                        if _is_none_check(test):
+                            continue
+                        if flow.expr_traced(test):
+                            yield Finding(
+                                self.id, self.severity, module.path,
+                                test.lineno, symbol=qual,
+                                message=(
+                                    "Python branch on a traced value "
+                                    f"inside a {info.kind} body — this "
+                                    "concretizes the tracer; use "
+                                    "jnp.where / lax.cond / lax.select"))
+                    flow.feed(stmt)
+
+
+def _single_assignments(fn: ast.AST) -> Dict[str, ast.AST]:
+    """name -> value expr for names assigned exactly once within ``fn``."""
+    assigns: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name):
+                    assigns.setdefault(tgt.id, []).append(node.value)
+        elif isinstance(node, ast.AugAssign) and \
+                isinstance(node.target, ast.Name):
+            assigns.setdefault(node.target.id, []).append(node)
+    return {n: vals[0] for n, vals in assigns.items() if len(vals) == 1}
+
+
+def _bounded(node: ast.AST, env: Dict[str, ast.AST],
+             stack: Optional[Set[str]] = None) -> bool:
+    """Value set provably finite across the process lifetime.  ``env``
+    maps single-assigned local names to their value exprs (resolved
+    recursively: ``k = min(user_k, K_MAX)`` makes ``k`` bounded)."""
+    stack = stack if stack is not None else set()
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Name):
+        if node.id.isupper():
+            return True
+        if node.id in env and node.id not in stack:
+            return _bounded(env[node.id], env, stack | {node.id})
+        return False
+    if isinstance(node, ast.Attribute):
+        # shapes/dims are static per trace; ALL_CAPS module constants
+        return node.attr in _STATIC_ATTRS or node.attr.isupper()
+    if isinstance(node, ast.Subscript):
+        return _bounded(node.value, env, stack)
+    if isinstance(node, ast.UnaryOp):
+        return _bounded(node.operand, env, stack)
+    if isinstance(node, ast.BinOp):
+        return _bounded(node.left, env, stack) and \
+            _bounded(node.right, env, stack)
+    if isinstance(node, ast.IfExp):
+        return _bounded(node.body, env, stack) and \
+            _bounded(node.orelse, env, stack)
+    if isinstance(node, ast.Call):
+        name = (call_name(node) or "").split(".")[-1]
+        if name == "len":
+            return True
+        if name == "min":   # a clamp: bounded if ANY bound is bounded
+            return any(_bounded(a, env, stack) for a in node.args)
+        if name == "max":
+            return all(_bounded(a, env, stack) for a in node.args)
+        # bucket lookups quantize to the finite kernels/tuning.py ladder
+        if "bucket" in name or name in ("size_bucket", "resolve"):
+            return True
+    return False
+
+
+@register_rule
+class UnboundedStaticRule:
+    """Static args at jitted call sites drawn from unbounded value sets."""
+
+    id = "jax-unbounded-static"
+    severity = "warning"
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for module in project.modules:
+            jitted = {qual.split(".")[-1]: (fn, info)
+                      for qual, (fn, info) in
+                      traced_functions(module).items()
+                      if info.static_argnames or info.static_argnums}
+            if not jitted:
+                continue
+            for qual, fn, _cls in iter_functions(module.tree):
+                consts = _single_assignments(fn)
+                for node in ast.walk(fn):
+                    if not isinstance(node, ast.Call) or \
+                            not isinstance(node.func, ast.Name):
+                        continue
+                    entry = jitted.get(node.func.id)
+                    if entry is None:
+                        continue
+                    target_fn, info = entry
+                    if target_fn is fn:       # the def itself, not a site
+                        continue
+                    static = _static_params(target_fn, info)
+                    annotations = {
+                        a.arg: ast.dump(a.annotation)
+                        for a in (list(target_fn.args.args)
+                                  + list(target_fn.args.kwonlyargs))
+                        if a.annotation is not None}
+                    for kw in node.keywords:
+                        if kw.arg is None or kw.arg not in static:
+                            continue
+                        if kw.arg in TUNED_BLOCK_KWARGS:
+                            continue          # finite tuned table
+                        if "'bool'" in annotations.get(kw.arg, ""):
+                            continue          # two-valued: bounded by type
+                        if not _bounded(kw.value, consts):
+                            yield Finding(
+                                self.id, self.severity, module.path,
+                                node.lineno, symbol=qual,
+                                message=(
+                                    f"static arg {kw.arg!r} to jitted "
+                                    f"{node.func.id}() may take unboundedly "
+                                    "many values — each distinct value is a "
+                                    "fresh trace + XLA compile; clamp to a "
+                                    "bucket (kernels/tuning.size_bucket) or "
+                                    "pass it dynamically"))
+
+
+def _donating_functions(module: Module) -> Dict[str, Tuple[ast.AST, JitInfo]]:
+    return {qual.split(".")[-1]: (fn, info)
+            for qual, (fn, info) in traced_functions(module).items()
+            if info.donate_argnums}
+
+
+@register_rule
+class DonatedReuseRule:
+    """Reads of an argument after it was passed at a donated position."""
+
+    id = "jax-donated-reuse"
+    severity = "error"
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for module in project.modules:
+            donating = _donating_functions(module)
+            if not donating:
+                continue
+            for qual, fn, _cls in iter_functions(module.tree):
+                yield from self._check_function(module, qual, fn, donating)
+
+    def _check_function(self, module: Module, qual: str, fn: ast.AST,
+                        donating) -> Iterable[Finding]:
+        # call line -> donated argument names
+        donated_at: List[Tuple[int, str, str]] = []
+        assigns: Dict[str, List[int]] = {}
+        loads: Dict[str, List[int]] = {}
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        assigns.setdefault(tgt.id, []).append(node.lineno)
+            elif isinstance(node, ast.Name) and \
+                    isinstance(node.ctx, ast.Load):
+                loads.setdefault(node.id, []).append(node.lineno)
+            if not isinstance(node, ast.Call) or \
+                    not isinstance(node.func, ast.Name):
+                continue
+            entry = donating.get(node.func.id)
+            if entry is None:
+                continue
+            _, info = entry
+            for i in info.donate_argnums:
+                if i < len(node.args) and \
+                        isinstance(node.args[i], ast.Name):
+                    donated_at.append((node.lineno, node.args[i].id,
+                                       node.func.id))
+        for call_line, name, callee in donated_at:
+            # a read after the call, before any reassignment, is a
+            # use-after-donation (the common `x = f(x)` rebind is fine:
+            # the reassignment shares the call line)
+            rebinds = [ln for ln in assigns.get(name, ()) if ln >= call_line]
+            horizon = min(rebinds) if rebinds else float("inf")
+            for load_line in loads.get(name, ()):
+                if call_line < load_line and load_line > horizon:
+                    break
+                if call_line < load_line <= horizon:
+                    yield Finding(
+                        self.id, self.severity, module.path, load_line,
+                        symbol=qual,
+                        message=(
+                            f"{name!r} is read after being donated to "
+                            f"{callee}() on line {call_line} — XLA may "
+                            "have reused its buffer; rebind the result "
+                            "or drop the donation"))
+                    break
+
+
+@register_rule
+class ServeDonatedAppendRule:
+    """LiveIndex contract: serve-tier buffer writes must not donate."""
+
+    id = "serve-donated-append"
+    severity = "error"
+
+    def check(self, project: Project) -> Iterable[Finding]:
+        for module in project.modules:
+            if module.package != "serve" and \
+                    ".serve." not in f".{module.name}.":
+                continue
+            for qual, (fn, info) in traced_functions(module).items():
+                if not info.donate_argnums or not hasattr(fn, "body"):
+                    continue
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call) and \
+                            (call_name(node) or "").endswith(
+                                "dynamic_update_slice"):
+                        yield Finding(
+                            self.id, self.severity, module.path,
+                            fn.lineno, symbol=qual,
+                            message=(
+                                "serve-tier append buffers must not be "
+                                "donated: an in-flight search on another "
+                                "thread may still hold the previous buffer "
+                                "(the lock covers the swap, not the "
+                                "compute) — use donate_argnums=()"))
+                        break

@@ -234,6 +234,17 @@ def sharded_row_buffer(host_rows: np.ndarray, *, capacity: int, dim: int,
                              chunk_rows=chunk_rows, span=span)
 
 
+class QRelRows(NamedTuple):
+    """Flat QRel rows, field-compatible with ``core.graph_builder.
+    QRelTable`` (duck-typed by every draw-stage consumer) — defined here so
+    ``table()`` needs no distributed -> core import against the layering."""
+
+    query_ids: Any
+    entity_ids: Any
+    scores: Any
+    valid: Any
+
+
 class ShardedQRels(NamedTuple):
     """Query-routed QRel buffers, sharded from birth.
 
@@ -264,16 +275,15 @@ class ShardedQRels(NamedTuple):
     def buffer_rows(self) -> int:
         return self.query_ids.shape[1]
 
-    def table(self):
-        """The routed rows as a flat :class:`~repro.core.graph_builder.
-        QRelTable` (global query ids) — what the per-draw stages consume;
-        row order differs from the birth table, which no draw-stage
-        consumer depends on (reconstruction is row-order-free)."""
-        from repro.core.graph_builder import QRelTable
-        return QRelTable(self.query_ids.reshape(-1),
-                         self.entity_ids.reshape(-1),
-                         self.scores.reshape(-1),
-                         self.valid.reshape(-1).astype(bool))
+    def table(self) -> "QRelRows":
+        """The routed rows as a flat :class:`QRelRows` (global query ids,
+        field-compatible with ``QRelTable``) — what the per-draw stages
+        consume; row order differs from the birth table, which no
+        draw-stage consumer depends on (reconstruction is row-order-free)."""
+        return QRelRows(self.query_ids.reshape(-1),
+                        self.entity_ids.reshape(-1),
+                        self.scores.reshape(-1),
+                        self.valid.reshape(-1).astype(bool))
 
     @classmethod
     def from_host(cls, qrels, *, num_queries: int, num_entities: int,

@@ -53,6 +53,14 @@ from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 
 ENV_VAR = "REPRO_TUNED_KERNELS"
+
+# TPU v5e hardware constants (per chip) for the roofline terms.  These
+# live here (the bottom of the kernel stack) so both the autotuner and
+# launch/dryrun.py can read them without a kernels -> launch import.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 5.0e10               # B/s per link (~50 GB/s)
+
 RESULTS_TABLE_PATH = os.path.join("results", "tuned_kernels.json")
 DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(__file__),
                                   "tuned_default.json")
@@ -224,7 +232,6 @@ class HillclimbTuner:
 def compiled_roofline(compiled) -> Dict[str, float]:
     """Roofline terms (ms) from a compiled XLA executable's cost analysis —
     the same reading as ``launch/dryrun.py``/``benchmarks/hillclimb.py``."""
-    from repro.launch.dryrun import HBM_BW, PEAK_FLOPS_BF16
     cost = compiled.cost_analysis()
     cost = cost[0] if isinstance(cost, (list, tuple)) else (cost or {})
     flops = float(cost.get("flops", 0.0))

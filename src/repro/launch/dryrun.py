@@ -30,13 +30,11 @@ from repro.configs import get_arch, iter_cells, list_archs
 from repro.launch.cells import build_cell
 from repro.launch.logs import add_logging_args, setup_logging
 from repro.launch.mesh import make_production_mesh
+# the hardware constants live at the bottom of the stack (kernels/tuning.py)
+# so the autotuner's roofline never imports upward into launch
+from repro.kernels.tuning import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: F401
 
 log = logging.getLogger("repro.launch.dryrun")
-
-# TPU v5e hardware constants (per chip) for the roofline terms
-PEAK_FLOPS_BF16 = 197e12      # FLOP/s
-HBM_BW = 819e9                # B/s
-ICI_BW = 5.0e10               # B/s per link (~50 GB/s)
 
 _COLLECTIVE_RE = re.compile(
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"

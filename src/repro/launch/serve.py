@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.launch.logs import (add_logging_args, add_obs_args, init_obs,
                                setup_logging, write_metrics)
+from repro.obs import recompile
 from repro.launch.mesh import parse_mesh
 from repro.retrieval.backends import get_backend
 from repro.retrieval.engines import (available_retrieval_engines,
@@ -72,6 +73,35 @@ def build_server(args) -> SearchServer:
         ingest=IngestConfig(append_cap=args.append_cap,
                             compact_threshold=args.compact_threshold),
         max_tenants=args.max_tenants)
+
+
+def run_recompile_check(server, rng, *, dim: int, k: int,
+                        n_ticks: int) -> dict:
+    """The scheduler's steady-state contract, measured: warm every batch
+    bucket once, mark the sentinel waterline, then drive ``n_ticks`` more
+    ticks across the bucket set — any XLA compilation past the mark is a
+    retrace leak (a shape escaped the bucket/k_max pinning)."""
+    sched = server.scheduler
+    buckets = sched.config.bucket_set()
+
+    def _submit_fill(fill: int) -> None:
+        for _ in range(fill):
+            q = rng.normal(size=(dim,)).astype(np.float32)
+            if server.submit(q, k=k, tenant="tenant-0") is None:
+                raise RuntimeError("queue full during recompile check; "
+                                   "raise --max-queue")
+
+    for b in buckets:                    # warmup: one compile per bucket
+        _submit_fill(b)
+        sched.tick()
+    recompile.mark()
+    steady_ticks = 0
+    for i in range(n_ticks):             # steady state: every shape warm
+        _submit_fill(buckets[i % len(buckets)])
+        if sched.tick():
+            steady_ticks += 1
+    return {"steady_ticks": steady_ticks,
+            "steady_recompiles": recompile.since()}
 
 
 def main(argv: Optional[list] = None) -> int:
@@ -116,6 +146,10 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--append-cap", type=int, default=256)
     p.add_argument("--compact-threshold", type=int, default=4096)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--recompile-check", type=int, default=0, metavar="N",
+                   help="after the load: warm every scheduler bucket, mark "
+                        "the recompile sentinel, run N more ticks and exit "
+                        "1 on any steady-state XLA compilation")
     p.add_argument("--out", default=None, metavar="PATH",
                    help="write the load report JSON to PATH")
     add_logging_args(p)
@@ -123,6 +157,8 @@ def main(argv: Optional[list] = None) -> int:
     args = p.parse_args(argv)
     setup_logging(args)
     init_obs(args)
+    if args.recompile_check > 0:
+        recompile.enable()
     # fail fast with the registry error messages, before any build
     get_retrieval_engine(args.engine)
     get_backend(args.backend)
@@ -174,6 +210,15 @@ def main(argv: Optional[list] = None) -> int:
              "(%d completed, %d rejected, mean batch %.1f)",
              report.throughput_rps, report.p50_s * 1e3, report.p99_s * 1e3,
              report.completed, report.rejected, report.mean_batch)
+    steady = None
+    if args.recompile_check > 0:
+        steady = run_recompile_check(server, rng, dim=args.dim, k=args.k,
+                                     n_ticks=args.recompile_check)
+        row.update(steady)
+        log.info("recompile check: %d steady ticks, %d recompilations "
+                 "past the warmup mark (per key: %s)",
+                 steady["steady_ticks"], steady["steady_recompiles"],
+                 recompile.counts())
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
@@ -182,6 +227,10 @@ def main(argv: Optional[list] = None) -> int:
     metrics_path = write_metrics(args)
     if metrics_path:
         log.info("wrote %s", metrics_path)
+    if steady is not None and steady["steady_recompiles"]:
+        log.error("steady-state recompile: the scheduler's bucket/k_max "
+                  "pinning leaked a shape")
+        return 1
     return 0
 
 

@@ -10,12 +10,17 @@ a metrics registry, and the shared benchmark timer.
     ``provenance`` (host/device/git identity for artifacts).
   * :mod:`repro.obs.memory`  — per-device resident-bytes accounting and
     the ``build.peak_bytes_per_device`` gauge for the streaming build path.
+  * :mod:`repro.obs.recompile` — XLA recompile sentinel: per-region
+    compilation counts, asserted zero in steady state by serve-smoke CI.
+  * :mod:`repro.obs.locks`   — instrumented debug locks recording
+    acquisition order and counts (``REPRO_DEBUG_LOCKS=1``).
 """
-from repro.obs import memory, trace
+from repro.obs import locks, memory, recompile, trace
+from repro.obs.locks import make_lock, make_rlock
 from repro.obs.metrics import (DEFAULT_BUCKETS, REGISTRY, Counter, Gauge,
                                Histogram, Registry)
 from repro.obs.timing import git_sha, provenance, timeit
 
-__all__ = ["memory", "trace", "DEFAULT_BUCKETS", "REGISTRY", "Counter",
-           "Gauge", "Histogram", "Registry", "git_sha", "provenance",
-           "timeit"]
+__all__ = ["locks", "memory", "recompile", "trace", "make_lock",
+           "make_rlock", "DEFAULT_BUCKETS", "REGISTRY", "Counter", "Gauge",
+           "Histogram", "Registry", "git_sha", "provenance", "timeit"]

@@ -185,17 +185,20 @@ class Registry:
             return inst
 
     def counters(self) -> Iterable[Counter]:
-        return list(self._counters.values())
+        with self._lock:
+            return list(self._counters.values())
 
     def snapshot(self) -> dict:
         """Every instrument rendered to plain values (the JSON export)."""
-        return {
-            "counters": {n: c.value
-                         for n, c in sorted(self._counters.items())},
-            "gauges": {n: g.value for n, g in sorted(self._gauges.items())},
-            "histograms": {n: h.to_dict()
-                           for n, h in sorted(self._histograms.items())},
-        }
+        with self._lock:
+            return {
+                "counters": {n: c.value
+                             for n, c in sorted(self._counters.items())},
+                "gauges": {n: g.value
+                           for n, g in sorted(self._gauges.items())},
+                "histograms": {n: h.to_dict()
+                               for n, h in sorted(self._histograms.items())},
+            }
 
     def reset(self) -> None:
         """Drop every instrument (tests; never called on the hot path)."""

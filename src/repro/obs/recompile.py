@@ -1,0 +1,146 @@
+"""Recompile sentinel (DESIGN.md §15): count XLA compilations per
+compile-key at runtime.
+
+The static analyzer flags retrace *amplifiers* (unbounded static args);
+this module catches the retraces that actually happen.  It hooks
+``jax.monitoring`` — XLA fires ``/jax/core/compile/backend_compile_duration``
+once per backend compilation — and attributes each compilation to the
+innermost active :func:`region` on the calling thread (compilation runs
+synchronously on the thread that triggered the trace, so thread-local
+attribution is exact).
+
+The serving contract this enforces: after the scheduler's warmup pass has
+touched every (bucket, k) shape, **steady state never recompiles**.
+``launch/serve.py --recompile-check N`` runs warmup, calls :func:`mark`,
+ticks N more times, and fails the process when :func:`since` is nonzero —
+CI's serve-smoke job asserts exactly that.
+
+Usage::
+
+    from repro.obs import recompile
+    recompile.enable()
+    with recompile.region("serve.tick"):
+        session.search_scored(q, k=k)
+    recompile.counts()   # {"serve.tick": 1} on the cold call, then stable
+
+Counting is disabled by default and costs one thread-local read per
+compilation event when enabled — nothing on the dispatch fast path.  The
+listener itself is registered at most once per process (JAX offers no
+per-listener unregistration), gated by the enabled flag.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterator, Optional
+
+from repro.obs.metrics import REGISTRY
+
+__all__ = ["enable", "disable", "is_enabled", "region", "counts", "total",
+           "mark", "since", "reset", "UNATTRIBUTED", "COMPILE_EVENT"]
+
+#: the jax.monitoring event fired once per backend (XLA) compilation
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+#: key for compilations that happen outside any region()
+UNATTRIBUTED = "unattributed"
+
+
+class _State:
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.enabled = False
+        self.listener_registered = False
+        self.counts: Dict[str, int] = {}
+        self.marked: Dict[str, int] = {}
+        self.local = threading.local()
+
+
+_STATE = _State()
+
+
+def _region_key() -> str:
+    stack = getattr(_STATE.local, "stack", None)
+    return stack[-1] if stack else UNATTRIBUTED
+
+
+def _on_event(event: str, duration: float, **kwargs) -> None:
+    if not _STATE.enabled or not event.startswith(COMPILE_EVENT):
+        return
+    key = _region_key()
+    with _STATE.lock:
+        _STATE.counts[key] = _STATE.counts.get(key, 0) + 1
+    REGISTRY.counter(f"recompile.{key}").inc()
+
+
+def _ensure_listener() -> None:
+    if _STATE.listener_registered:
+        return
+    import jax.monitoring
+    jax.monitoring.register_event_duration_secs_listener(_on_event)
+    _STATE.listener_registered = True
+
+
+def enable() -> None:
+    """Start counting compilations (registers the JAX listener once)."""
+    _ensure_listener()
+    _STATE.enabled = True
+
+
+def disable() -> None:
+    """Stop counting (the listener stays registered but inert)."""
+    _STATE.enabled = False
+
+
+def is_enabled() -> bool:
+    return _STATE.enabled
+
+
+@contextlib.contextmanager
+def region(key: str) -> Iterator[None]:
+    """Attribute compilations on this thread to ``key`` while active.
+    Regions nest; the innermost wins."""
+    stack = getattr(_STATE.local, "stack", None)
+    if stack is None:
+        stack = _STATE.local.stack = []
+    stack.append(key)
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def counts() -> Dict[str, int]:
+    """Compilations per region key since enable()/reset()."""
+    with _STATE.lock:
+        return dict(_STATE.counts)
+
+
+def total(key: Optional[str] = None) -> int:
+    """Total compilations (or for one key) since enable()/reset()."""
+    with _STATE.lock:
+        if key is not None:
+            return _STATE.counts.get(key, 0)
+        return sum(_STATE.counts.values())
+
+
+def mark() -> None:
+    """Snapshot the current counts — the end-of-warmup waterline."""
+    with _STATE.lock:
+        _STATE.marked = dict(_STATE.counts)
+
+
+def since(key: Optional[str] = None) -> int:
+    """Compilations since the last mark() (all keys, or one)."""
+    with _STATE.lock:
+        if key is not None:
+            return _STATE.counts.get(key, 0) - _STATE.marked.get(key, 0)
+        return (sum(_STATE.counts.values())
+                - sum(_STATE.marked.values()))
+
+
+def reset() -> None:
+    """Zero all counts and the mark (tests)."""
+    with _STATE.lock:
+        _STATE.counts.clear()
+        _STATE.marked.clear()

@@ -58,6 +58,7 @@ from jax import lax
 
 from repro.distributed.sharded_corpus import sharded_row_buffer
 from repro.obs import REGISTRY, trace
+from repro.obs.locks import make_rlock
 from repro.obs.metrics import Registry
 from repro.retrieval.search_core import SearchConfig, SearchSession
 from repro.retrieval.sharded import sharded_buffer_topk
@@ -125,6 +126,7 @@ class LiveIndex:
         if self._host.ndim != 2:
             raise ValueError(
                 f"live corpus must be 2-D (N, D); got {self._host.shape}")
+        self._lock = make_rlock("live-index")
         self.ingest = ingest or IngestConfig()
         if self.ingest.append_cap < 1 or self.ingest.compact_threshold < 1:
             raise ValueError("append_cap and compact_threshold must be >= 1")
@@ -144,24 +146,29 @@ class LiveIndex:
         self._pending = np.zeros((0, self.dim), np.float32)
         self._cap = 0
         self._buf = None
-        self._lock = threading.RLock()
         self._compactor: Optional[threading.Thread] = None
+        self._compacting = False
         self._compact_error: Optional[BaseException] = None
 
     # -- geometry ----------------------------------------------------------
+    # Every property below reads state the compactor swaps under the lock;
+    # the RLock is re-entrant, so holders of the lock can use them freely.
 
     @property
     def dim(self) -> int:
-        return int(self._host.shape[1])
+        with self._lock:
+            return int(self._host.shape[1])
 
     @property
     def frozen_n(self) -> int:
         """Rows covered by the frozen index (grows at each compaction)."""
-        return self._session.corpus_size
+        with self._lock:
+            return self._session.corpus_size
 
     @property
     def pending_rows(self) -> int:
-        return int(self._pending.shape[0])
+        with self._lock:
+            return int(self._pending.shape[0])
 
     @property
     def n(self) -> int:
@@ -171,28 +178,32 @@ class LiveIndex:
 
     @property
     def config(self) -> SearchConfig:
-        return self._session.config
+        with self._lock:
+            return self._session.config
 
     # -- ingest ------------------------------------------------------------
 
     def _rebuild_buffer(self) -> None:
         """Re-materialise the device buffer from the pending host rows
         (capacity growth, post-compaction shrink, or any sharded append —
-        the sharded buffer re-streams; it is small by construction)."""
-        cfg = self._session.config
-        need = max(self.pending_rows, 1)
-        cap = max(self._cap, self.ingest.append_cap)
-        while cap < need:
-            cap *= 2
-        self._cap = cap
-        if cfg.sharded:
-            self._buf = sharded_row_buffer(
-                self._pending, capacity=cap, dim=self.dim, mesh=cfg.mesh,
-                chunk_rows=cfg.stream_chunk)
-        else:
-            padded = np.zeros((cap, self.dim), np.float32)
-            padded[:self.pending_rows] = self._pending
-            self._buf = jnp.asarray(padded)
+        the sharded buffer re-streams; it is small by construction).
+        Takes the (re-entrant) lock itself: callers already hold it, but
+        the buffer swap must never run bare."""
+        with self._lock:
+            cfg = self._session.config
+            need = max(self.pending_rows, 1)
+            cap = max(self._cap, self.ingest.append_cap)
+            while cap < need:
+                cap *= 2
+            self._cap = cap
+            if cfg.sharded:
+                self._buf = sharded_row_buffer(
+                    self._pending, capacity=cap, dim=self.dim,
+                    mesh=cfg.mesh, chunk_rows=cfg.stream_chunk)
+            else:
+                padded = np.zeros((cap, self.dim), np.float32)
+                padded[:self.pending_rows] = self._pending
+                self._buf = jnp.asarray(padded)
 
     def append(self, docs) -> Tuple[int, int]:
         """Land new document vectors f32[m, D]; returns their global id
@@ -317,21 +328,29 @@ class LiveIndex:
         background = (self.ingest.background if background is None
                       else background)
         with self._lock:
-            if self._compactor is not None and self._compactor.is_alive():
-                if wait:
-                    self._join_compactor()
-                return False
-            m = self.pending_rows
-            if m == 0:
-                return False
-            host_new = np.concatenate([self._host, self._pending[:m]],
-                                      axis=0)
+            # the in-flight flag (not Thread.is_alive(), which is False
+            # until start() and leaves a window where two compactions both
+            # pass the check) — set here, cleared in the worker's finally
+            if self._compacting:
+                in_flight = True
+            else:
+                in_flight = False
+                m = self.pending_rows
+                if m == 0:
+                    return False
+                host_new = np.concatenate([self._host, self._pending[:m]],
+                                          axis=0)
+                cfg = self._session.config
+                self._compacting = True
+        if in_flight:
+            if wait:
+                self._join_compactor()
+            return False
 
         def build():
             with trace.span("serve.compact", rows=int(host_new.shape[0]),
                             folded=m):
-                session = SearchSession(host_new, self._session.config,
-                                        key=self._key)
+                session = SearchSession(host_new, cfg, key=self._key)
                 df_new = _df_counts(host_new) if self._tfidf else None
                 with self._lock:
                     self._host = host_new
@@ -344,7 +363,11 @@ class LiveIndex:
                 self._registry.counter("serve.ingest.compactions").inc()
 
         if not background:
-            build()
+            try:
+                build()
+            finally:
+                with self._lock:
+                    self._compacting = False
             return True
 
         def guarded():
@@ -353,6 +376,9 @@ class LiveIndex:
             except BaseException as e:   # surfaced on the next call
                 with self._lock:
                     self._compact_error = e
+            finally:
+                with self._lock:
+                    self._compacting = False
 
         t = threading.Thread(target=guarded, name="live-index-compact",
                              daemon=True)
@@ -364,7 +390,10 @@ class LiveIndex:
         return True
 
     def _join_compactor(self) -> None:
-        t = self._compactor
+        # snapshot under the lock, join OUTSIDE it: the build thread needs
+        # the lock to land its swap, so joining while holding it deadlocks
+        with self._lock:
+            t = self._compactor
         if t is not None:
             t.join()
         self._raise_pending_error()

@@ -41,7 +41,8 @@ from typing import Any, Callable, Deque, Optional, Tuple
 
 import numpy as np
 
-from repro.obs import REGISTRY, trace
+from repro.obs import REGISTRY, recompile, trace
+from repro.obs.locks import make_lock
 from repro.obs.metrics import Registry
 
 __all__ = ["SchedulerConfig", "PendingResult", "MicrobatchScheduler"]
@@ -133,7 +134,7 @@ class MicrobatchScheduler:
         self._sessions = sessions
         self._registry = registry
         self._queue: Deque[PendingResult] = deque()
-        self._lock = threading.Lock()
+        self._lock = make_lock("scheduler-queue")
         self.ticks = 0
 
     # -- admission ---------------------------------------------------------
@@ -202,7 +203,8 @@ class MicrobatchScheduler:
         cfg = self.config
         tenant = batch[0].tenant
         bucket = self._bucket(len(batch))
-        with trace.span("serve.tick", requests=len(batch), bucket=bucket):
+        with trace.span("serve.tick", requests=len(batch), bucket=bucket), \
+                recompile.region("serve.tick"):
             try:
                 session = self._sessions(tenant)
                 dim = batch[0].query.shape[0]

@@ -23,12 +23,12 @@ context cache (serve/engine.py) — one eviction policy, two tiers.
 """
 from __future__ import annotations
 
-import threading
 from collections import OrderedDict
 from typing import Any, Callable, Hashable, Optional, Tuple
 
 from repro.obs import REGISTRY
 from repro.obs import memory as obs_memory
+from repro.obs.locks import make_lock
 from repro.obs.metrics import Registry
 
 __all__ = ["LRUCache", "TenantCache", "RESIDENT_GAUGE"]
@@ -48,7 +48,7 @@ class LRUCache:
         self.capacity = capacity
         self._on_evict = on_evict
         self._items: "OrderedDict[Hashable, Any]" = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = make_lock("lru-cache")
 
     def __len__(self) -> int:
         with self._lock:
@@ -96,7 +96,7 @@ class TenantCache:
                  registry: Registry = REGISTRY):
         self._provider = provider
         self._registry = registry
-        self._build_lock = threading.Lock()
+        self._build_lock = make_lock("tenant-build")
         self._lru = LRUCache(capacity, on_evict=self._evicted)
 
     def _sample_resident(self) -> None:

@@ -1,0 +1,579 @@
+"""Contract-analyzer tests (DESIGN.md §15): one positive + one negative
+fixture per rule family, suppression comments, baseline round-trip, the
+--json report schema, import cycle/layering fixtures, and the meta-test —
+the analyzer run over src/repro itself must report zero error-severity
+findings (the repo obeys its own contracts)."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.analysis import core as acore
+from repro.analysis.concurrency_rules import graph_cycle, lock_order_graph
+from repro.analysis.core import (Finding, Project, analyze,
+                                 load_default_rules)
+from repro.launch import lint as lint_cli
+
+load_default_rules()
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC_REPRO = os.path.join(REPO, "src", "repro")
+
+
+def _project(tmp_path, sources, pkg="fix"):
+    """Write {relpath: source} under a package dir and load it."""
+    root = tmp_path / pkg
+    root.mkdir(parents=True, exist_ok=True)
+    (root / "__init__.py").write_text("")
+    for rel, src in sources.items():
+        path = root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        if path.parent != root and not \
+                (path.parent / "__init__.py").exists():
+            (path.parent / "__init__.py").write_text("")
+        path.write_text(textwrap.dedent(src))
+    return Project.load([str(root)])
+
+
+def _rules_hit(findings, rule):
+    return [f for f in findings if f.rule == rule]
+
+
+# ---------------------------------------------------------------------------
+# Family 1: JAX trace hazards
+# ---------------------------------------------------------------------------
+
+
+JIT_BAD = """
+    import jax
+
+    @jax.jit
+    def f(x, y):
+        v = float(x)          # host cast on a traced value
+        if y > 0:             # python branch on a traced value
+            v = v + 1.0
+        return v
+"""
+
+JIT_OK = """
+    import jax
+    import jax.numpy as jnp
+    import functools
+
+    @functools.partial(jax.jit, static_argnames=("k",))
+    def f(x, *, k):
+        steps = float(k)          # k is static: fine
+        if x.shape[0] > 4:        # shapes are static under tracing: fine
+            x = x * steps
+        return jnp.where(x > 0, x, 0.0)
+"""
+
+
+def test_host_cast_positive_and_negative(tmp_path):
+    bad = analyze(_project(tmp_path, {"bad.py": JIT_BAD}))
+    hits = _rules_hit(bad, "jax-host-cast")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert "float()" in hits[0].message
+    good = analyze(_project(tmp_path, {"sub/good.py": JIT_OK},
+                            pkg="fixok"))
+    assert not _rules_hit(good, "jax-host-cast")
+
+
+def test_traced_branch_positive_and_negative(tmp_path):
+    bad = analyze(_project(tmp_path, {"bad.py": JIT_BAD}))
+    assert len(_rules_hit(bad, "jax-traced-branch")) == 1
+    good = analyze(_project(tmp_path, {"sub/good.py": JIT_OK},
+                            pkg="fixok"))
+    assert not _rules_hit(good, "jax-traced-branch")
+
+
+def test_item_method_flagged(tmp_path):
+    src = """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.sum().item()
+    """
+    hits = _rules_hit(analyze(_project(tmp_path, {"m.py": src})),
+                      "jax-host-cast")
+    assert len(hits) == 1 and ".item()" in hits[0].message
+
+
+def test_unbounded_static_flags_free_value_not_clamped(tmp_path):
+    src = """
+        import functools
+        import jax
+
+        K_MAX = 16
+
+        @functools.partial(jax.jit, static_argnames=("k", "width"))
+        def topk(x, *, k, width):
+            return x[:k]
+
+        def serve(x, user_k, rows):
+            return topk(x, k=user_k, width=rows)   # both unbounded
+
+        def serve_clamped(x, user_k):
+            k = min(user_k, K_MAX)                 # min-clamp: bounded
+            return topk(x, k=k, width=1024)
+    """
+    findings = analyze(_project(tmp_path, {"m.py": src}))
+    hits = _rules_hit(findings, "jax-unbounded-static")
+    assert {(f.symbol, f.severity) for f in hits} == \
+        {("serve", "warning")}
+    assert len(hits) == 2          # k and width at the bare call site
+
+
+def test_tuned_block_kwargs_are_known_static(tmp_path):
+    # block_q comes from the finite kernels/tuning.py table: never flagged
+    src = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("block_q",))
+        def kernel(x, *, block_q):
+            return x
+
+        def dispatch(x, resolved):
+            return kernel(x, block_q=resolved["block_q"])
+    """
+    findings = analyze(_project(tmp_path, {"m.py": src}))
+    assert not _rules_hit(findings, "jax-unbounded-static")
+
+
+# ---------------------------------------------------------------------------
+# Family 2: donation safety
+# ---------------------------------------------------------------------------
+
+
+def test_donated_reuse_positive_and_negative(tmp_path):
+    src = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def step(buf, x):
+            return buf + x
+
+        def bad(buf, x):
+            out = step(buf, x)
+            return out + buf.sum()     # buf read after donation
+
+        def good(buf, x):
+            buf = step(buf, x)         # rebind: the donated name dies
+            return buf.sum()
+    """
+    findings = analyze(_project(tmp_path, {"m.py": src}))
+    hits = _rules_hit(findings, "jax-donated-reuse")
+    assert len(hits) == 1
+    assert hits[0].symbol == "bad" and hits[0].severity == "error"
+
+
+def test_serve_donated_append_contract(tmp_path):
+    src = """
+        import functools
+        import jax
+        from jax import lax
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def write(buf, rows, start):
+            return lax.dynamic_update_slice(buf, rows, (start, 0))
+    """
+    # same code outside serve/: the LiveIndex contract does not apply
+    ok = analyze(_project(tmp_path, {"other.py": src}, pkg="elsewhere"))
+    assert not _rules_hit(ok, "serve-donated-append")
+    bad = analyze(_project(tmp_path, {"ingest.py": src}, pkg="serve"))
+    hits = _rules_hit(bad, "serve-donated-append")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    # the real append path declares donate_argnums=() — meta-test covers it
+
+
+# ---------------------------------------------------------------------------
+# Family 3: concurrency
+# ---------------------------------------------------------------------------
+
+
+GUARDED_BAD = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []
+            self._n = 0
+
+        def put(self, x):
+            with self._lock:
+                self._items.append(x)
+                self._n += 1
+
+        def drop_all(self):
+            self._items = []      # bare write: races put()
+
+        def size(self):
+            return self._n        # bare read
+"""
+
+GUARDED_OK = """
+    import threading
+
+    class Box:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._items = []
+
+        def put(self, x):
+            with self._lock:
+                self._items.append(x)
+
+        def size(self):
+            with self._lock:
+                return len(self._items)
+"""
+
+
+def test_unguarded_write_and_read(tmp_path):
+    findings = analyze(_project(tmp_path, {"box.py": GUARDED_BAD},
+                                pkg="serve"))
+    writes = _rules_hit(findings, "conc-unguarded-write")
+    reads = _rules_hit(findings, "conc-unguarded-read")
+    assert [f.symbol for f in writes] == ["Box.drop_all"]
+    assert writes[0].severity == "error"
+    assert [f.symbol for f in reads] == ["Box.size"]
+    assert reads[0].severity == "warning"
+    clean = analyze(_project(tmp_path, {"box2.py": GUARDED_OK},
+                             pkg="obs"))
+    assert not _rules_hit(clean, "conc-unguarded-write")
+    assert not _rules_hit(clean, "conc-unguarded-read")
+
+
+LOCK_CYCLE = """
+    import threading
+
+    class A:
+        def __init__(self, b):
+            self._lock = threading.Lock()
+            self._b = b
+
+        def step(self):
+            with self._lock:
+                self._b.poke()     # A.lock held -> takes B.lock
+
+    class B:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self._a = A(self)
+
+        def poke(self):
+            with self._lock:
+                pass
+
+        def kick(self):
+            with self._lock:
+                self._a.step()     # B.lock held -> takes A.lock: cycle
+"""
+
+
+def test_lock_order_cycle(tmp_path):
+    project = _project(tmp_path, {"locks.py": LOCK_CYCLE}, pkg="serve")
+    edges = lock_order_graph(project)
+    assert graph_cycle(edges) is not None
+    hits = _rules_hit(analyze(project), "conc-lock-order")
+    assert len(hits) == 1 and "A" in hits[0].message \
+        and "B" in hits[0].message
+
+
+THREAD_BAD = """
+    import threading
+
+    class Fire:
+        def start(self):
+            t = threading.Thread(target=self._work, daemon=True)
+            t.start()
+
+        def _work(self):
+            pass
+"""
+
+THREAD_OK = """
+    import threading
+
+    class Fire:
+        def __init__(self):
+            self._err = None
+
+        def start(self):
+            self._t = threading.Thread(target=self._work, daemon=True)
+            self._t.start()
+
+        def _work(self):
+            try:
+                pass
+            except BaseException as e:
+                self._err = e
+
+        def close(self):
+            self._t.join()
+            if self._err is not None:
+                raise self._err
+"""
+
+
+def test_thread_failure_surfacing(tmp_path):
+    bad = analyze(_project(tmp_path, {"t.py": THREAD_BAD}, pkg="serve"))
+    hits = _rules_hit(bad, "conc-thread-no-surface")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    good = analyze(_project(tmp_path, {"t.py": THREAD_OK}, pkg="serve"))
+    assert not _rules_hit(good, "conc-thread-no-surface")
+
+
+# ---------------------------------------------------------------------------
+# Family 4: registry conformance
+# ---------------------------------------------------------------------------
+
+
+REGISTRY_SRC = """
+    from typing import Dict, Protocol, runtime_checkable
+
+    @runtime_checkable
+    class Engine(Protocol):
+        name: str
+
+        def run(self, state, *, rounds): ...
+
+    _REGISTRY: Dict[str, "Engine"] = {}
+
+    def register(cls):
+        inst = cls()
+        _REGISTRY[inst.name] = inst
+        return cls
+
+    @register
+    class Good:
+        name = "good"
+
+        def run(self, state, *, rounds):
+            return state
+
+    @register
+    class MissingMethod:
+        name = "missing"
+
+    @register
+    class BadSignature:
+        name = "badsig"
+
+        def run(self, state, extra_required, *, rounds):
+            return state
+
+    @register
+    class MissingAttr:
+        def run(self, state, *, rounds):
+            return state
+"""
+
+
+def test_registry_conformance(tmp_path):
+    findings = analyze(_project(tmp_path, {"engines.py": REGISTRY_SRC}))
+    hits = _rules_hit(findings, "reg-conformance")
+    by_symbol = {f.symbol: f for f in hits}
+    assert "Good" not in {s.split(".")[0] for s in by_symbol}
+    assert any(s.startswith("MissingMethod") for s in by_symbol)
+    assert any(s.startswith("BadSignature") for s in by_symbol)
+    assert any(s.startswith("MissingAttr") for s in by_symbol)
+    assert all(f.severity == "error" for f in hits)
+
+
+# ---------------------------------------------------------------------------
+# Imports: cycles + layering
+# ---------------------------------------------------------------------------
+
+
+def _repro_tree(tmp_path, files):
+    """A fake repro.* package tree (module names resolve as repro.<pkg>)."""
+    root = tmp_path / "repro"
+    root.mkdir(parents=True, exist_ok=True)
+    (root / "__init__.py").write_text("")
+    for rel, src in files.items():
+        path = root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        init = path.parent / "__init__.py"
+        if not init.exists():
+            init.write_text("")
+        path.write_text(textwrap.dedent(src))
+    return Project.load([str(root)])
+
+
+def test_import_cycle_detected(tmp_path):
+    project = _repro_tree(tmp_path, {
+        "core/a.py": "from repro.data import b\n",
+        "data/b.py": "from repro.core import a\n",
+    })
+    hits = _rules_hit(analyze(project, rules=["import-cycle"]),
+                      "import-cycle")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert "core" in hits[0].message and "data" in hits[0].message
+
+
+def test_latent_deferred_cycle_warns(tmp_path):
+    project = _repro_tree(tmp_path, {
+        "core/a.py": "from repro.data import b\n",
+        "data/b.py": ("def late():\n"
+                      "    from repro.core import a\n"
+                      "    return a\n"),
+    })
+    hits = _rules_hit(analyze(project, rules=["import-cycle"]),
+                      "import-cycle")
+    assert len(hits) == 1 and hits[0].severity == "warning"
+    assert "latent" in hits[0].message
+
+
+def test_layering_eval_upward_is_error(tmp_path):
+    project = _repro_tree(tmp_path, {
+        "eval/metrics.py": "from repro.serve import engine\n",
+        "serve/engine.py": "",
+    })
+    hits = _rules_hit(analyze(project, rules=["import-layering"]),
+                      "import-layering")
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert hits[0].symbol == "eval"
+
+
+def test_layering_downward_is_clean(tmp_path):
+    project = _repro_tree(tmp_path, {
+        "eval/metrics.py": "from repro.core import thing\n"
+                           "from repro.obs import trace\n",
+        "core/thing.py": "from repro.obs import trace\n",
+        "obs/trace.py": "",
+    })
+    assert not analyze(project, rules=["import-layering", "import-cycle"])
+
+
+def test_real_tree_imports_clean():
+    project = Project.load([SRC_REPRO])
+    findings = analyze(project, rules=["import-cycle", "import-layering"])
+    assert findings == [], [f.format() for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# Framework: suppression, baseline, CLI
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_comment_silences(tmp_path):
+    src = JIT_BAD.replace("v = float(x)",
+                          "v = float(x)  # lint: disable=jax-host-cast")
+    findings = analyze(_project(tmp_path, {"m.py": src}))
+    assert not _rules_hit(findings, "jax-host-cast")
+    assert _rules_hit(findings, "jax-traced-branch")   # others still fire
+
+
+def test_suppression_line_above_and_bare(tmp_path):
+    src = """
+        import jax
+
+        @jax.jit
+        def f(x):
+            # lint: disable
+            return float(x)
+    """
+    assert not analyze(_project(tmp_path, {"m.py": src}))
+
+
+def test_baseline_round_trip(tmp_path):
+    project = _project(tmp_path, {"bad.py": JIT_BAD})
+    findings = analyze(project)
+    assert findings
+    path = str(tmp_path / "baseline.json")
+    acore.save_baseline(path, findings)
+    baseline = acore.load_baseline(path)
+    assert acore.new_findings(findings, baseline) == []
+    extra = Finding("jax-host-cast", "error", "x.py", 1, "new issue")
+    assert acore.new_findings(findings + [extra], baseline) == [extra]
+    # fingerprints are line-free: moving a finding does not churn
+    moved = [Finding(f.rule, f.severity, f.path, f.line + 7, f.message,
+                     f.symbol) for f in findings]
+    assert acore.new_findings(moved, baseline) == []
+
+
+def test_missing_baseline_is_empty(tmp_path):
+    assert acore.load_baseline(str(tmp_path / "absent.json")) == frozenset()
+
+
+def test_cli_json_schema_and_exit_codes(tmp_path, capsys):
+    root = tmp_path / "fix"
+    root.mkdir()
+    (root / "__init__.py").write_text("")
+    (root / "bad.py").write_text(textwrap.dedent(JIT_BAD))
+    baseline = str(tmp_path / "b.json")
+    rc = lint_cli.main(["--json", str(root), "--baseline", baseline])
+    assert rc == 1                       # new error findings
+    report = json.loads(capsys.readouterr().out)
+    assert report["version"] == 1
+    assert set(report["counts"]) == {"info", "warning", "error"}
+    assert report["counts"]["error"] >= 2
+    assert report["failing"] == report["counts"]["error"]
+    for f in report["findings"]:
+        assert {"rule", "severity", "path", "line", "symbol", "message",
+                "fingerprint", "new"} <= set(f)
+    # accept into the baseline -> clean run
+    assert lint_cli.main(["--write-baseline", str(root),
+                          "--baseline", baseline]) == 0
+    assert lint_cli.main([str(root), "--baseline", baseline]) == 0
+
+
+def test_cli_rules_subset_and_unknown(tmp_path):
+    root = tmp_path / "fix"
+    root.mkdir()
+    (root / "__init__.py").write_text("")
+    (root / "bad.py").write_text(textwrap.dedent(JIT_BAD))
+    rc = lint_cli.main(["--rules", "import-cycle", str(root),
+                        "--baseline", str(tmp_path / "nb.json")])
+    assert rc == 0                       # jax rules not selected
+    with pytest.raises(ValueError):
+        lint_cli.main(["--rules", "no-such-rule", str(root)])
+
+
+def test_module_shim_entrypoint():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
+               JAX_PLATFORMS="cpu")
+    out = subprocess.run(
+        [sys.executable, "-m", "launch.lint", "--list-rules"],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert out.returncode == 0, out.stderr
+    assert "jax-host-cast" in out.stdout
+    assert "reg-conformance" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Meta: the repo obeys its own contracts
+# ---------------------------------------------------------------------------
+
+
+def test_meta_no_error_findings_on_src_repro():
+    findings = analyze(Project.load([SRC_REPRO]))
+    errors = [f for f in findings if f.severity == "error"]
+    assert errors == [], "\n".join(f.format() for f in errors)
+
+
+def test_meta_registries_discovered():
+    from repro.analysis.registry_rules import find_registries
+    project = Project.load([SRC_REPRO])
+    by_proto = {r.protocol.name: len(r.implementations)
+                for r in find_registries(project)}
+    for proto in ("LPEngine", "SamplerStrategy", "RetrievalEngine",
+                  "ScoringBackend"):
+        assert by_proto.get(proto, 0) >= 2, by_proto
+
+
+def test_meta_baseline_matches_tree():
+    """The committed baseline covers every current finding (no drift)."""
+    baseline_path = os.path.join(REPO, "lint_baseline.json")
+    findings = analyze(Project.load([SRC_REPRO]))
+    baseline = acore.load_baseline(baseline_path)
+    fresh = acore.new_findings(findings, baseline)
+    assert fresh == [], "\n".join(f.format() for f in fresh)

@@ -1,0 +1,309 @@
+"""Runtime contract tests (DESIGN.md §15): the recompile sentinel
+(per-region XLA compilation counting, the scheduler's steady-state
+zero-recompile contract), the instrumented debug locks (acquisition
+counts, order edges, inversion detection, the LiveIndex lock contract),
+and regressions for the serve-tier findings the static analyzer
+surfaced (compaction in-flight TOCTOU, compact(wait=True) join-under-
+lock deadlock, metrics snapshot under concurrent mutation)."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import locks, recompile
+from repro.obs.metrics import Registry
+from repro.retrieval.search_core import SearchConfig
+from repro.serve import (IngestConfig, LiveIndex, SchedulerConfig,
+                         SearchServer)
+
+D = 16
+
+
+def _corpus(n, seed=0, dim=D):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, dim)).astype(np.float32)
+
+
+@pytest.fixture
+def sentinel():
+    """Recompile counting on, zeroed, and off again afterwards."""
+    recompile.enable()
+    recompile.reset()
+    yield recompile
+    recompile.disable()
+    recompile.reset()
+
+
+@pytest.fixture
+def debug_locks():
+    """DebugLock wrappers from make_lock()/make_rlock(), reset + off after."""
+    locks.enable()
+    locks.reset()
+    yield locks
+    locks.disable()
+    locks.reset()
+
+
+# ---------------------------------------------------------------------------
+# recompile sentinel
+# ---------------------------------------------------------------------------
+
+
+def test_sentinel_counts_cold_compile_not_warm(sentinel):
+    @jax.jit
+    def f(x):
+        return x * 2.0
+
+    with sentinel.region("contract.cold"):
+        f(jnp.ones((3,))).block_until_ready()
+    cold = sentinel.total("contract.cold")
+    assert cold >= 1                     # the cold call compiled
+    with sentinel.region("contract.warm"):
+        f(jnp.ones((3,))).block_until_ready()
+    assert sentinel.total("contract.warm") == 0   # warm shape: no compile
+    # a NEW shape is a new trace -> a counted compilation
+    with sentinel.region("contract.warm"):
+        f(jnp.ones((5,))).block_until_ready()
+    assert sentinel.total("contract.warm") >= 1
+
+
+def test_sentinel_mark_since_waterline(sentinel):
+    @jax.jit
+    def g(x):
+        return x + 1.0
+
+    g(jnp.ones((4,))).block_until_ready()
+    sentinel.mark()
+    assert sentinel.since() == 0
+    g(jnp.ones((4,))).block_until_ready()    # warm: waterline holds
+    assert sentinel.since() == 0
+    g(jnp.ones((6,))).block_until_ready()    # new shape: crosses it
+    assert sentinel.since() >= 1
+
+
+def test_sentinel_region_nesting_innermost_wins(sentinel):
+    @jax.jit
+    def h(x):
+        return x - 1.0
+
+    with sentinel.region("outer"):
+        with sentinel.region("inner"):
+            h(jnp.ones((7,))).block_until_ready()
+    assert sentinel.total("inner") >= 1
+    assert sentinel.total("outer") == 0
+
+
+def test_sentinel_disabled_counts_nothing():
+    recompile.disable()
+    recompile.reset()
+
+    @jax.jit
+    def q(x):
+        return x * 3.0
+
+    q(jnp.ones((9,))).block_until_ready()
+    assert recompile.total() == 0
+
+
+def test_scheduler_steady_state_never_recompiles(sentinel):
+    """The serving contract CI enforces: once every bucket shape is warm,
+    >= 10 further ticks compile nothing (bucket + k_max pinning holds)."""
+    server = SearchServer(lambda t: _corpus(256, seed=3),
+                          config=SearchConfig(),
+                          scheduler=SchedulerConfig(max_queue=128,
+                                                    max_batch=8, k_max=10))
+    rng = np.random.default_rng(0)
+    sched = server.scheduler
+    buckets = sched.config.bucket_set()
+
+    def fill(n):
+        for _ in range(n):
+            q = rng.normal(size=(D,)).astype(np.float32)
+            assert server.submit(q, k=5, tenant="tenant-0") is not None
+
+    for b in buckets:                    # warm every dispatch shape
+        fill(b)
+        sched.tick()
+    sentinel.mark()
+    for i in range(12):                  # steady state across the bucket set
+        fill(buckets[i % len(buckets)])
+        assert sched.tick() > 0
+    assert sentinel.since() == 0, recompile.counts()
+
+
+# ---------------------------------------------------------------------------
+# instrumented debug locks
+# ---------------------------------------------------------------------------
+
+
+def test_make_lock_plain_when_disabled():
+    locks.disable()
+    try:
+        lk = locks.make_lock("plain")
+        assert not isinstance(lk, locks.DebugLock)
+        with lk:
+            pass
+    finally:
+        locks.reset()
+
+
+def test_debug_lock_counts_and_edges(debug_locks):
+    a = debug_locks.make_lock("A")
+    b = debug_locks.make_lock("B")
+    with a:
+        with b:
+            pass
+    with a:
+        pass
+    assert debug_locks.acquire_counts() == {"A": 2, "B": 1}
+    assert ("A", "B") in debug_locks.edges()
+    assert debug_locks.inversions() == []
+
+
+def test_debug_lock_detects_inversion(debug_locks):
+    a = debug_locks.make_lock("A")
+    b = debug_locks.make_lock("B")
+    with a:
+        with b:
+            pass
+    with b:
+        with a:
+            pass
+    assert debug_locks.inversions() == [("A", "B")]
+
+
+def test_debug_rlock_reentrant_no_self_edge(debug_locks):
+    r = debug_locks.make_rlock("R")
+    with r:
+        with r:
+            pass
+    assert debug_locks.acquire_counts()["R"] == 2
+    assert all(e != ("R", "R") for e in debug_locks.edges())
+
+
+def test_live_index_reads_take_the_lock(debug_locks):
+    """The conc-unguarded-read contract, as a counted fact: geometry
+    properties acquire the live-index lock."""
+    li = LiveIndex(_corpus(32), SearchConfig())
+    debug_locks.reset()                  # drop construction-time acquires
+    _ = li.pending_rows
+    _ = li.frozen_n
+    _ = li.dim
+    assert debug_locks.acquire_counts().get("live-index", 0) >= 3
+
+
+# ---------------------------------------------------------------------------
+# serve-tier regressions (the analyzer's real findings, pinned)
+# ---------------------------------------------------------------------------
+
+
+def _gated_session(monkeypatch):
+    """Patch ingest.SearchSession so the SECOND construction (the
+    compaction rebuild — the first built the frozen index) signals
+    ``entered`` and blocks on ``gate``.  The build's session construction
+    runs OUTSIDE the index lock, so appends/compacts stay live meanwhile."""
+    from repro.serve import ingest as ingest_mod
+    real = ingest_mod.SearchSession
+    gate, entered = threading.Event(), threading.Event()
+    calls = {"n": 0}
+
+    def slow(*a, **kw):
+        calls["n"] += 1
+        if calls["n"] > 1:
+            entered.set()
+            gate.wait(timeout=10)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ingest_mod, "SearchSession", slow)
+    return gate, entered
+
+
+def test_compact_in_flight_flag_blocks_second_compaction(monkeypatch):
+    """Between Thread creation and start(), is_alive() is False — the
+    in-flight FLAG must close that window so two compactions never run
+    concurrently (the TOCTOU the analyzer's donation/race pass flagged)."""
+    gate, entered = _gated_session(monkeypatch)
+    li = LiveIndex(_corpus(64), SearchConfig(), ingest=IngestConfig(
+        append_cap=512, compact_threshold=10 ** 9))
+    li.append(_corpus(8, seed=1))
+    assert li.compact(background=True) is True
+    assert entered.wait(timeout=10)      # the worker is mid-build
+    li.append(_corpus(8, seed=2))
+    assert li.compact(background=True) is False   # refused: in flight
+    gate.set()
+    li.flush()
+    assert li.frozen_n == 72             # only the first batch folded
+
+
+def test_compact_wait_while_in_flight_does_not_deadlock(monkeypatch):
+    """compact(wait=True) joining the worker must NOT hold the index lock
+    (the worker needs it to land the swap) — the deadlock the analyzer's
+    lock-order pass surfaced, pinned with a timeout."""
+    gate, entered = _gated_session(monkeypatch)
+    li = LiveIndex(_corpus(64), SearchConfig(), ingest=IngestConfig(
+        append_cap=512, compact_threshold=10 ** 9))
+    li.append(_corpus(8, seed=1))
+    assert li.compact(background=True) is True
+    assert entered.wait(timeout=10)
+    done = threading.Event()
+
+    def second():
+        li.compact(background=True, wait=True)   # must block, then return
+        done.set()
+
+    t = threading.Thread(target=second, daemon=True)
+    t.start()
+    gate.set()
+    assert done.wait(timeout=10), "compact(wait=True) deadlocked"
+    t.join(timeout=10)
+    assert li.frozen_n == 72
+
+
+def test_background_compaction_error_surfaces():
+    li = LiveIndex(_corpus(32), SearchConfig(), ingest=IngestConfig(
+        append_cap=512, compact_threshold=10 ** 9))
+    li.append(_corpus(4, seed=1))
+
+    def boom(*a, **kw):
+        raise RuntimeError("synthetic build failure")
+
+    li._rebuild_buffer = boom
+    li.compact(background=True)
+    with pytest.raises(RuntimeError, match="background compaction failed"):
+        li.flush()
+
+
+def test_metrics_snapshot_under_concurrent_mutation():
+    """counters()/snapshot() iterate under the registry lock — no
+    RuntimeError from a dict resized mid-iteration (the unguarded-read
+    finding in obs/metrics.py, fixed and pinned)."""
+    reg = Registry()
+    stop = threading.Event()
+    errors = []
+
+    def mutate():
+        i = 0
+        while not stop.is_set():
+            reg.counter(f"c.{i % 997}").inc()
+            i += 1
+
+    def snapshot():
+        try:
+            while not stop.is_set():
+                reg.counters()
+                reg.snapshot()
+        except RuntimeError as e:     # "dictionary changed size ..."
+            errors.append(e)
+
+    threads = [threading.Thread(target=mutate, daemon=True)
+               for _ in range(2)] + \
+              [threading.Thread(target=snapshot, daemon=True)]
+    for t in threads:
+        t.start()
+    stop.wait(timeout=0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5)
+    assert errors == []
